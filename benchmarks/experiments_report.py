@@ -1,0 +1,59 @@
+"""Render EXPERIMENTS.md §Dry-run and §Roofline tables from the dry-run
+artifacts (markdown to stdout; pasted into EXPERIMENTS.md)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.roofline import analyze_record
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x * 1e6:.0f}µs"
+    if x < 1:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def main(dd: str = "experiments/dryrun") -> None:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dd, "*.json"))):
+        rec = json.load(open(path))
+        row = analyze_record(rec)
+        row["compile_s_wall"] = rec["compile_s"]
+        row["coll_detail"] = rec.get("collectives_corrected", {})
+        row["mem"] = rec.get("memory_analysis", {})
+        rows.append(row)
+
+    print("### §Dry-run (lower+compile per cell; per-device bytes)\n")
+    print("| arch | shape | mesh | tag | compile s | args/dev | temp/dev | top collectives (per device per step) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        top = sorted(r["coll_detail"].items(), key=lambda kv: -kv[1]["bytes"])[:2]
+        tops = "; ".join(f"{k} {v['bytes']/1e9:.2f} GB ×{v['count']:.0f}" for k, v in top) or "—"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['tag'] or 'baseline'} "
+              f"| {r['compile_s_wall']:.1f} "
+              f"| {r['mem'].get('argument_size_in_bytes',0)/1e9:.2f} GB "
+              f"| {r['mem'].get('temp_size_in_bytes',0)/1e9:.2f} GB | {tops} |")
+
+    print("\n### §Roofline (single-pod 16×16; per-device terms)\n")
+    print("| arch | shape | tag | compute | memory | collective | dominant | MODEL_FLOPS | useful | roofline frac | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {r['tag'] or 'baseline'} "
+              f"| {_fmt_s(r['compute_s'])} | {_fmt_s(r['memory_s'])} "
+              f"| {_fmt_s(r['collective_s'])} | {r['dominant']} "
+              f"| {r['model_flops']:.2e} | {r['useful_ratio']:.3f} "
+              f"| {r['roofline_fraction']:.3f} | {r['advice']} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,42 @@
+"""Paper Fig. 10 + Table I: generator scalability.
+
+Synthesizes the paper's demonstration networks (8-in/8-out with 14 and 31
+fully-connected 32-node hidden layers) plus the case study, through the full
+spec → state-space program → StableHLO → compile flow, and reports the
+"resource/timing" analogs (params, HLO bytes, flops, lower/compile seconds).
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+
+from repro.configs.paper_mlp import CASE_STUDY, FIG10_A, FIG10_B
+from repro.core.synthesis import synthesize
+
+from .common import emit
+
+
+def run(out_dir: str = "experiments") -> list[dict]:
+    rows = []
+    for spec in (CASE_STUDY, FIG10_A, FIG10_B):
+        rep = synthesize(spec, batch=64)
+        rows.append({
+            "name": rep.spec.name,
+            "layers": spec.num_hidden_layers,
+            "params": rep.num_params,
+            "lower_ms": round(rep.trace_lower_s * 1e3, 1),
+            "compile_ms": round(rep.compile_s * 1e3, 1),
+            "hlo_kib": round(rep.hlo_bytes / 1024, 1),
+            "flops": rep.flops,
+            "serial_depth": rep.serial_depth,
+        })
+        emit(f"fig10_generate_{spec.num_hidden_layers}L",
+             (rep.trace_lower_s + rep.compile_s) * 1e6,
+             f"params={rep.num_params} hlo={rows[-1]['hlo_kib']}KiB")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "fig10_generator.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows

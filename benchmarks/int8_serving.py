@@ -1,0 +1,50 @@
+"""Fig. 11's metric applied to the zoo: weight-only int8 serving SNR +
+compression per architecture (the paper's fixed-point deployment stage on
+modern LMs instead of the case-study MLP)."""
+
+from __future__ import annotations
+
+import csv
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.quantization import output_snr_db
+from repro.models import lm
+from repro.runtime.quantized import dequantize_lm_params, quantize_lm_params
+
+from .common import emit
+
+ARCHS = ("smollm-135m", "falcon-mamba-7b", "gemma3-27b", "olmoe-1b-7b",
+         "zamba2-1.2b", "deepseek-v2-lite-16b")
+
+
+def run(out_dir: str = "experiments") -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    rows = []
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        params = lm.init_params(cfg, key)
+        qp, stats = quantize_lm_params(params)
+        dq = dequantize_lm_params(qp)
+        toks = jax.random.randint(key, (2, 16), 0, cfg.vocab)
+        lf, _ = lm.forward(params, cfg, toks, mode="train")
+        lq, _ = lm.forward(dq, cfg, toks, mode="train")
+        snr = float(np.mean(output_snr_db(
+            np.asarray(lf, np.float64).reshape(-1, cfg.vocab),
+            np.asarray(lq, np.float64).reshape(-1, cfg.vocab))))
+        agree = float(jnp.mean((jnp.argmax(lf, -1) == jnp.argmax(lq, -1)).astype(jnp.float32)))
+        rows.append({"arch": arch, "logits_snr_db": round(snr, 1),
+                     "greedy_agree": round(agree, 3),
+                     "compression": round(stats["compression"], 2)})
+        emit(f"int8_serving_{arch}", 0.0,
+             f"snr={snr:.1f}dB agree={agree:.2f} compress={stats['compression']:.2f}x")
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "int8_serving.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows

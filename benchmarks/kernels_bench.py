@@ -1,0 +1,47 @@
+"""Kernel micro-benchmarks: jnp reference path timings on CPU (the Pallas
+paths are validated in interpret mode — their on-TPU perf is structural, via
+BlockSpec/VMEM reasoning in the §Perf log, not CPU wall time)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.int8_matmul.ref import quantize_matmul_ref
+from repro.kernels.ssm_scan.ref import ssm_scan_ref
+from repro.kernels.tanh_lut.ref import make_lut, tanh_lut_ref
+
+from .common import emit, time_call
+
+
+def run(out_dir: str = "experiments") -> None:
+    key = jax.random.PRNGKey(0)
+
+    B, T, D, N = 2, 512, 256, 16
+    x = jax.random.normal(key, (B, T, D))
+    delta = jax.random.uniform(key, (B, T, D), minval=1e-3, maxval=0.5)
+    A = -jnp.exp(jax.random.normal(key, (D, N)))
+    Bm = jax.random.normal(key, (B, T, N))
+    Cm = jax.random.normal(key, (B, T, N))
+    h0 = jnp.zeros((B, D, N))
+    us = time_call(jax.jit(ssm_scan_ref), x, delta, A, Bm, Cm, h0)
+    emit("kernel_ssm_scan_ref", us, f"B{B}xT{T}xD{D}xN{N}")
+
+    q = jax.random.normal(key, (1, 512, 8, 64))
+    k = jax.random.normal(key, (1, 512, 2, 64))
+    v = jax.random.normal(key, (1, 512, 2, 64))
+    us = time_call(jax.jit(lambda q, k, v: flash_attention_ref(q, k, v)), q, k, v)
+    emit("kernel_flash_attention_ref", us, "S512 H8 KV2 hd64 causal")
+
+    a = jax.random.normal(key, (512, 512))
+    b = jax.random.normal(key, (512, 512))
+    us_q = time_call(jax.jit(quantize_matmul_ref), a, b)
+    us_f = time_call(jax.jit(lambda a, b: a @ b), a, b)
+    emit("kernel_int8_matmul_ref", us_q, f"512^3 (f32 matmul: {us_f:.0f}us)")
+
+    lut = make_lut(12)
+    xs = jax.random.normal(key, (65536,)) * 3
+    us_l = time_call(jax.jit(lambda x: tanh_lut_ref(x, lut)), xs)
+    us_t = time_call(jax.jit(jnp.tanh), xs)
+    emit("kernel_tanh_lut_ref", us_l, f"64k lanes (jnp.tanh: {us_t:.0f}us)")

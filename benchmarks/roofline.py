@@ -1,0 +1,193 @@
+"""§Roofline: three-term analysis of every dry-run cell.
+
+Reads ``experiments/dryrun/*.json`` (written by ``repro.launch.dryrun``) and
+derives, per (arch × shape × mesh):
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+    memory term     = HLO_bytes_per_device / HBM_bw             [s]
+    collective term = collective_bytes_per_device / link_bw     [s]
+
+(The task formula divides job-wide totals by `chips`; post-SPMD HLO is the
+per-device program, so its totals ARE the per-chip numerator.)  FLOPs and
+collective bytes come from the trip-count-aware HLO analysis
+(`repro.launch.hlo_analysis`) because ``cost_analysis()`` counts scan bodies
+once.  Also reported: MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D
+(inference), the useful-compute ratio, the dominant term, and a
+what-would-move-it sentence.
+"""
+
+from __future__ import annotations
+
+import csv
+import glob
+import json
+import os
+
+from repro.configs import ARCH_IDS, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+from repro.models.config import ALL_SHAPES, ModelConfig
+
+from .common import emit
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+# ---------------------------------------------------------------------------
+# analytic MODEL_FLOPS
+# ---------------------------------------------------------------------------
+
+def active_matmul_params(cfg: ModelConfig) -> float:
+    """Per-token matmul parameters actually touched in one forward pass
+    (MoE experts scaled by top_k/E; Zamba's shared block counted once per
+    APPLICATION — the resource-shared weights do full work every reuse)."""
+    d = cfg.d_model
+    total = 0.0
+
+    def attn_params():
+        if cfg.use_mla:
+            dn, dr, dv, r = (cfg.qk_nope_head_dim, cfg.qk_rope_head_dim,
+                             cfg.v_head_dim, cfg.kv_lora_rank)
+            H = cfg.n_heads
+            return d * H * (dn + dr) + d * r + d * dr + r * H * dn + r * H * dv + H * dv * d
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        return d * H * hd + 2 * d * KV * hd + H * hd * d
+
+    def mlp_params(F):
+        return d * F * (3 if cfg.gated_mlp else 2)
+
+    def mamba1_params():
+        DI, N, R, K = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_actual, cfg.d_conv
+        return d * 2 * DI + K * DI + DI * (R + 2 * N) + R * DI + DI * d
+
+    def mamba2_params():
+        DI, N, K, H2 = cfg.d_inner, cfg.ssm_state, cfg.d_conv, cfg.n_mamba_heads
+        return d * (2 * DI + 2 * N + H2) + K * (DI + 2 * N) + DI * d
+
+    stack = list(cfg.layer_pattern) * cfg.n_groups + list(cfg.tail_pattern)
+    for kind in stack:
+        if kind in ("attn", "attn_local"):
+            total += attn_params() + mlp_params(cfg.d_ff)
+        elif kind == "moe":
+            F = cfg.d_ff_expert
+            total += attn_params() + d * cfg.n_experts  # router
+            total += cfg.top_k * (3 * d * F) + cfg.n_shared_experts * (3 * d * F)
+        elif kind == "cross":
+            H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+            total += d * H * hd + 2 * cfg.frontend_dim * KV * hd + H * hd * d
+            total += mlp_params(cfg.d_ff)
+        elif kind == "mamba1":
+            total += mamba1_params()
+        elif kind == "mamba2":
+            total += mamba2_params()
+        elif kind == "shared_attn":
+            total += attn_params() + mlp_params(cfg.d_ff)
+            r = cfg.shared_attn_lora_rank
+            if r:
+                H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+                total += r * (3 * d + H * hd + 2 * KV * hd)
+    total += d * cfg.vocab  # head matmul (tied or not)
+    if cfg.family == "encoder":
+        total += cfg.frontend_dim * d
+    return total
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    s = SHAPES[shape_name]
+    tokens = s.global_batch * (1 if s.kind == "decode" else s.seq_len)
+    mult = 6.0 if s.kind == "train" else 2.0
+    return mult * active_matmul_params(cfg) * tokens
+
+
+# ---------------------------------------------------------------------------
+# record -> roofline row
+# ---------------------------------------------------------------------------
+
+def _advice(dom: str, rec: dict) -> str:
+    coll = rec.get("collectives_corrected") or {}
+    biggest = max(coll, key=lambda k: coll[k]["bytes"]) if coll else "none"
+    ratio = rec.get("useful_ratio", 0)
+    if dom == "compute":
+        if ratio < 0.3:
+            return (f"compute-dominated with only {ratio:.0%} useful FLOPs — kill "
+                    "replicated/rematerialized work (activation sharding constraints, "
+                    "remat policy) before touching kernels")
+        return "compute-dominated at good efficiency — next: larger per-chip batch or fewer remat passes"
+    if dom == "memory":
+        return ("HBM-bound — fuse/shrink materialized intermediates (flash-attention "
+                "kernel path, bf16 carries) or raise arithmetic intensity with bigger tiles")
+    return (f"collective-bound (mostly {biggest}) — reshard to cut {biggest} volume, "
+            "overlap with compute (latency-hiding), or compress payloads (int8 allreduce)")
+
+
+def analyze_record(rec: dict) -> dict | None:
+    cfg = get_config(rec["arch"])
+    n_dev = rec["n_devices"]
+    flops_dev = rec.get("flops_corrected") or rec.get("cost_analysis", {}).get("flops", 0)
+    mem_dev = rec.get("memory_traffic") or rec.get("cost_analysis", {}).get("bytes accessed", 0)
+    coll = rec.get("collectives_corrected") or rec.get("collectives") or {}
+    coll_bytes = sum(v["bytes"] for v in coll.values())
+
+    t_comp = flops_dev / PEAK_FLOPS_BF16
+    t_mem = mem_dev / HBM_BW
+    t_coll = coll_bytes / ICI_BW_PER_LINK
+    mf = model_flops(cfg, rec["shape"])
+    useful = mf / (flops_dev * n_dev) if flops_dev else 0.0
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # The achievable floor is the LARGER of (ideal compute time) and (time to
+    # read each per-device input — weights/opt-state/caches — once from HBM).
+    # Decode cells are legitimately bound by the second term.
+    arg_bytes = rec.get("memory_analysis", {}).get("argument_size_in_bytes", 0)
+    ideal = max(mf / (n_dev * PEAK_FLOPS_BF16), arg_bytes / HBM_BW)
+    rec2 = dict(rec, useful_ratio=useful)
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "compute_s": t_comp,
+        "memory_s": t_mem,
+        "collective_s": t_coll,
+        "dominant": dom,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_fraction": ideal / bound if bound else 0.0,
+        "advice": _advice(dom, rec2),
+        "arg_bytes_per_dev": rec.get("memory_analysis", {}).get("argument_size_in_bytes", 0),
+    }
+
+
+def run(out_dir: str = "experiments", dryrun_dir: str | None = None,
+        quiet: bool = False) -> list[dict]:
+    dd = dryrun_dir or os.path.join(out_dir, "dryrun")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dd, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    if not rows:
+        emit("roofline", 0.0, "no dry-run artifacts found — run repro.launch.dryrun")
+        return rows
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "roofline.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        for r in rows:
+            w.writerow({k: (f"{v:.6g}" if isinstance(v, float) else v)
+                        for k, v in r.items()})
+
+    if not quiet:
+        base = [r for r in rows if not r["tag"] and r["mesh"] == "16x16"]
+        worst = sorted(base, key=lambda r: r["roofline_fraction"])[:3]
+        for r in base:
+            emit(f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                 f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+                 f"useful={r['useful_ratio']:.3f}")
+        emit("roofline_worst3", 0.0,
+             " | ".join(f"{r['arch']}/{r['shape']}={r['roofline_fraction']:.3f}"
+                        for r in worst))
+    return rows

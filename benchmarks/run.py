@@ -1,0 +1,48 @@
+"""Benchmark entry point — one bench per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines (stdout) and writes detailed
+CSVs under ``experiments/``.
+
+  fig11  — SNR vs word length (paper Fig. 11)
+  fig10  — generator scalability (paper Fig. 10)
+  table1 — generator API units (paper Table I)
+  fig3   — j-step Φ pipelining (paper Fig. 3)
+  fig5   — C-slow retiming (paper Fig. 5)
+  kernels— kernel reference micro-benches
+  roofline — §Roofline terms from the dry-run artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None,
+                    help="subset: fig11 fig10 table1 fig3 fig5 kernels roofline")
+    ap.add_argument("--out", default="experiments")
+    args = ap.parse_args()
+
+    from . import (fig3_jstep, fig5_cslow, fig10_generator, fig11_snr,
+                   int8_serving, kernels_bench, roofline, table1_api)
+
+    benches = {
+        "fig11": lambda: fig11_snr.run(args.out),
+        "fig10": lambda: fig10_generator.run(args.out),
+        "table1": lambda: table1_api.run(args.out),
+        "fig3": lambda: fig3_jstep.run(args.out),
+        "fig5": lambda: fig5_cslow.run(args.out),
+        "kernels": lambda: kernels_bench.run(args.out),
+        "int8": lambda: int8_serving.run(args.out),
+        "roofline": lambda: roofline.run(args.out),
+    }
+    selected = args.only or list(benches)
+    print("name,us_per_call,derived")
+    for name in selected:
+        benches[name]()
+
+
+if __name__ == "__main__":
+    main()

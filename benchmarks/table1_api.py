@@ -1,0 +1,43 @@
+"""Paper Table I: the generator API, one call per row of the table, timed."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.synthesis import (
+    create_af,
+    create_af_end,
+    create_layer,
+    create_layer1,
+    create_layer_end,
+    create_mult,
+    create_top_module,
+    NetworkSpec,
+)
+
+from .common import emit, time_call
+
+
+def run(out_dir: str = "experiments") -> None:
+    key = jax.random.PRNGKey(0)
+    spec = NetworkSpec(8, 14, 32, 8)
+
+    emit("table1_create_top_module",
+         time_call(lambda: create_top_module(spec)[0]["W"]),
+         "full module wiring")
+    emit("table1_create_layer1",
+         time_call(lambda: create_layer1(8, 32, key)), "input layer β")
+    emit("table1_create_layer",
+         time_call(lambda: create_layer(32, 14, key)[0]), "stacked hidden W,b")
+    emit("table1_create_layer_end",
+         time_call(lambda: create_layer_end(32, 8, key)), "readout C")
+    af = create_af("tanh")
+    x = jnp.linspace(-3, 3, 4096)
+    emit("table1_create_af", time_call(jax.jit(af), x), "tanh unit (4096 lanes)")
+    af_end = create_af_end("identity")
+    emit("table1_create_af_end", time_call(jax.jit(af_end), x), "output AF")
+    macc = jax.jit(create_mult())
+    w = jax.random.normal(key, (32, 32))
+    v = jax.random.normal(key, (32,))
+    emit("table1_create_mult", time_call(macc, v, w, jnp.zeros(32)), "MACC unit")

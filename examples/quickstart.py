@@ -1,0 +1,66 @@
+"""Quickstart: the paper's six-stage workflow (§III) on its own case study.
+
+    python -m examples.quickstart          (PYTHONPATH=src, from repo root)
+
+Stage 1  state-space formation   — NetworkSpec -> eq. (8) program
+Stage 2  software simulation     — float64 reference run
+Stage 3  fixed-point analysis    — pick the word length for a 40 dB target
+Stage 4  architecture/implement  — jit + lower (StableHLO = the "RTL")
+Stage 5  verification            — fixed-point vs double-precision SNR
+Stage 6  optimization            — the j/unroll resource-speed knob
+"""
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.paper_mlp import CASE_STUDY
+from repro.core.quantization import (
+    default_format,
+    fixed_mlp_forward,
+    float_mlp_forward,
+    output_snr_db,
+)
+from repro.core.synthesis import create_top_module, synthesize
+
+
+def main() -> None:
+    print("== Stage 1: state-space formation (paper eq. 8) ==")
+    spec = CASE_STUDY
+    params, forward = create_top_module(spec)
+    print(f"   network: {spec.name} (3 inputs, 4x4 hidden, 2 outputs, tanh)")
+
+    print("== Stage 2: software simulation (float64 reference) ==")
+    rng = np.random.default_rng(0)
+    U = rng.uniform(-1, 1, size=(256, spec.num_inputs))
+    W = np.asarray(params["W"], np.float64)
+    b = np.asarray(params["b"], np.float64)
+    beta = np.asarray(params["beta"], np.float64)
+    C = np.asarray(params["C"], np.float64)
+    y_ref = float_mlp_forward(W, b, beta, C, U)
+    print(f"   y_ref[0] = {np.round(y_ref[0], 4)}")
+
+    print("== Stage 3: fixed-point analysis (target: 40 dB) ==")
+    chosen = None
+    for bits in (8, 12, 16, 20, 24):
+        y = fixed_mlp_forward(W, b, beta, C, U, default_format(bits))
+        snr = float(np.mean(output_snr_db(y_ref, y)))
+        mark = ""
+        if chosen is None and snr >= 40:
+            chosen = bits
+            mark = "   <-- selected"
+        print(f"   {bits:2d} bits -> {snr:7.2f} dB{mark}")
+    print(f"   word length: {chosen} bits (paper: 20-24 acceptable)")
+
+    print("== Stage 4/5: synthesis ('RTL' = StableHLO) + verification ==")
+    rep = synthesize(spec, batch=64)
+    print(f"   {rep.summary()}")
+
+    print("== Stage 6: optimization (j-step unroll knob) ==")
+    rep_j = synthesize(dataclasses.replace(spec, unroll=4), batch=64)
+    print(f"   unroll=4: serial depth {rep.serial_depth} -> {rep_j.serial_depth}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

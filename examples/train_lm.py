@@ -1,0 +1,76 @@
+"""End-to-end training driver: smollm-135m (the ~100M-class assigned arch)
+on the deterministic Markov stream, with checkpoints, straggler monitoring,
+and auto-resume.
+
+CPU demo (reduced sequence length, real architecture):
+    python -m examples.train_lm --steps 300
+Full-size config (for a real pod):
+    python -m examples.train_lm --full --steps 300
+
+The loss should fall from ~ln(vocab) toward the stream's entropy floor
+(printed) — a real learning signal, not noise.
+"""
+
+import argparse
+import dataclasses
+import json
+import os
+
+from repro import optim
+from repro.configs import get_config, get_smoke_config
+from repro.data import DataConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size model config (pod-scale; slow on CPU)")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default="experiments/train_lm_metrics.jsonl")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    if not args.full:
+        # keep the real 30-layer / 9-head geometry, CPU-sized width
+        cfg = dataclasses.replace(cfg, n_layers=get_config(args.arch).n_layers,
+                                  d_model=192, n_heads=3, n_kv_heads=3,
+                                  head_dim=64, d_ff=512, vocab=4096)
+    tcfg = TrainerConfig(
+        total_steps=args.steps, ckpt_every=max(args.steps // 5, 10),
+        ckpt_dir=args.ckpt_dir, log_every=10, microbatches=args.microbatches,
+    )
+    ocfg = optim.AdamWConfig(lr_peak=args.lr, warmup_steps=min(50, args.steps // 5),
+                             total_steps=args.steps)
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                      global_batch=args.batch, branching=4)
+
+    trainer = Trainer(cfg, tcfg, ocfg, dcfg)
+    if not args.resume:
+        import shutil
+
+        shutil.rmtree(args.ckpt_dir, ignore_errors=True)
+        os.makedirs(args.ckpt_dir, exist_ok=True)
+        trainer.ckpt = type(trainer.ckpt)(args.ckpt_dir, keep=tcfg.keep_ckpts)
+    res = trainer.run(resume=args.resume)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        for rec in res["metrics"]:
+            f.write(json.dumps(rec) + "\n")
+    print(f"\nfinal loss {res['final_loss']:.4f} "
+          f"(start {res['losses'][0]:.4f}, floor {res['entropy_floor']:.4f})")
+    print(f"metrics -> {args.out}; checkpoints -> {args.ckpt_dir}")
+    if res["straggler_events"]:
+        print("straggler events:", res["straggler_events"])
+
+
+if __name__ == "__main__":
+    main()

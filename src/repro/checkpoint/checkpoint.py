@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing.
+
+Properties (each covered by tests):
+  * **atomic**: writes go to ``<dir>/tmp.<step>``, are fsynced, then renamed
+    to ``<dir>/step_<N>`` and committed to ``MANIFEST.json`` — a crash
+    mid-save can never corrupt the latest valid checkpoint;
+  * **async**: ``save_async`` snapshots to host memory synchronously (cheap)
+    and writes on a background thread — training continues during I/O;
+  * **mesh-agnostic / elastic**: leaves are stored as full logical arrays
+    (gathered), keyed by pytree path; ``restore`` re-shards onto whatever
+    mesh/sharding the provided template uses, so a job can restart on a
+    different topology;
+  * **self-pruning**: keeps the newest ``keep`` checkpoints.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_MANIFEST = "MANIFEST.json"
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def _flatten_with_names(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return {_path_str(path): np.asarray(leaf) for path, leaf in flat}
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")
+        self._lock = threading.Lock()
+
+    # -- manifest ------------------------------------------------------------
+    def _read_manifest(self) -> list[int]:
+        p = os.path.join(self.dir, _MANIFEST)
+        if not os.path.exists(p):
+            return []
+        with open(p) as f:
+            return sorted(json.load(f)["steps"])
+
+    def _write_manifest(self, steps: list[int]) -> None:
+        p = os.path.join(self.dir, _MANIFEST)
+        tmp = p + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump({"steps": sorted(steps)}, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, p)
+
+    def latest_step(self) -> int | None:
+        steps = self._read_manifest()
+        return steps[-1] if steps else None
+
+    # -- save ----------------------------------------------------------------
+    def save(self, step: int, tree: PyTree, metadata: dict | None = None) -> None:
+        arrays = _flatten_with_names(tree)  # host snapshot (synchronous)
+        self._write(step, arrays, metadata or {})
+
+    def save_async(self, step: int, tree: PyTree, metadata: dict | None = None) -> Future:
+        arrays = _flatten_with_names(tree)  # snapshot NOW; write later
+        return self._pool.submit(self._write, step, arrays, metadata or {})
+
+    def _write(self, step: int, arrays: dict[str, np.ndarray], metadata: dict) -> None:
+        with self._lock:
+            tmp = os.path.join(self.dir, f"tmp.{step}")
+            final = os.path.join(self.dir, f"step_{step}")
+            if os.path.exists(tmp):
+                shutil.rmtree(tmp)
+            os.makedirs(tmp)
+            np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+            with open(os.path.join(tmp, "metadata.json"), "w") as f:
+                json.dump({"step": step, **metadata}, f)
+                f.flush()
+                os.fsync(f.fileno())
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.replace(tmp, final)
+            steps = [s for s in self._read_manifest() if s != step] + [step]
+            steps = sorted(steps)[-self.keep :]
+            self._write_manifest(steps)
+            # prune
+            for entry in os.listdir(self.dir):
+                if entry.startswith("step_") and int(entry[5:]) not in steps:
+                    shutil.rmtree(os.path.join(self.dir, entry), ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def restore(self, template: PyTree, step: int | None = None) -> tuple[PyTree, dict]:
+        """Restore onto the template's structure/shardings (elastic-safe)."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        data = np.load(os.path.join(d, "arrays.npz"))
+        with open(os.path.join(d, "metadata.json")) as f:
+            metadata = json.load(f)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for path, leaf in flat:
+            name = _path_str(path)
+            if name not in data:
+                raise KeyError(f"checkpoint missing leaf {name}")
+            arr = data[name]
+            if hasattr(leaf, "sharding") and hasattr(leaf, "shape"):
+                arr = jax.device_put(arr.astype(leaf.dtype), leaf.sharding)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, [l for _, l in zip(flat, leaves)]), metadata
+
+    def wait(self) -> None:
+        """Barrier for outstanding async saves (used at shutdown)."""
+        self._pool.shutdown(wait=True)
+        self._pool = ThreadPoolExecutor(max_workers=1, thread_name_prefix="ckpt")

@@ -1,0 +1,36 @@
+"""hubert-xlarge [arXiv:2106.07447] — encoder-only audio transformer.
+
+48L d_model=1280 16H d_ff=5120 vocab=504 (target cluster units).  The
+convolutional waveform frontend is a STUB per the task spec: ``input_specs``
+provides precomputed frame embeddings [B, T, 512]; the model owns the linear
+projection into d_model.  Encoder-only ⇒ no decode shapes; no RoPE (HuBERT
+uses convolutional positional encoding inside the stubbed frontend).
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="encoder",
+    n_layers=48,
+    d_model=1280,
+    vocab=504,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    gated_mlp=False,
+    mlp_act="gelu",
+    causal=False,
+    partial_rotary=0.0,
+    frontend_dim=512,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=64, vocab=32, n_heads=4, n_kv_heads=4,
+        head_dim=16, d_ff=128, frontend_dim=24,
+    )

@@ -1,0 +1,36 @@
+"""llama-3.2-vision-90b [hf:meta-llama/Llama-3.2-90B-Vision] — VLM backbone.
+
+100L d_model=8192 64H (kv=8) d_ff=28672 vocab=128256; gated cross-attention
+to vision memory every 5th layer (20 cross blocks).  The vision encoder is a
+STUB per the task spec: ``input_specs`` provides precomputed patch
+embeddings [B, 1601, 7680] as the cross-attention memory.
+Pure full attention ⇒ long_500k skipped.
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-90b",
+    family="vlm",
+    n_layers=100,
+    d_model=8192,
+    vocab=128_256,
+    n_heads=64,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=28_672,
+    mlp_act="silu",
+    rope_theta=500_000.0,
+    cross_attn_every=5,
+    frontend_dim=7680,
+    frontend_tokens=1601,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=5, d_model=64, vocab=256, n_heads=4, n_kv_heads=2,
+        head_dim=16, d_ff=128, frontend_dim=48, frontend_tokens=17,
+    )

@@ -1,0 +1,32 @@
+"""smollm-135m [hf:HuggingFaceTB/SmolLM-135M] — llama-arch small model.
+
+30L d_model=576 9H (kv=3) d_ff=1536 vocab=49152, tied embeddings.
+9 heads do not divide the 16-way model axis ⇒ attention TP disabled
+(FFN/embedding TP only); this is also the ~100M-class training-example arch.
+"""
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m",
+    family="dense",
+    n_layers=30,
+    d_model=576,
+    vocab=49_152,
+    n_heads=9,
+    n_kv_heads=3,
+    head_dim=64,
+    d_ff=1536,
+    mlp_act="silu",
+    tie_embeddings=True,
+    attn_tp=False,
+)
+
+
+def smoke_config() -> ModelConfig:
+    return dataclasses.replace(
+        CONFIG, n_layers=2, d_model=48, vocab=256, n_heads=3, n_kv_heads=1,
+        head_dim=16, d_ff=96,
+    )

@@ -1,0 +1,44 @@
+"""Core: the paper's contribution — state-space synthesis of networks."""
+
+from .state_space import (
+    StateSpaceModel,
+    linear_system,
+    mlp_forward,
+    nn_state_space,
+    run_direct,
+    run_scan,
+)
+from .transition import (
+    compose_dense,
+    jstep_dense_scan,
+    linear_recurrence_assoc,
+    linear_recurrence_chunked,
+    linear_recurrence_serial,
+    stepwise_dense_scan,
+)
+from .cslow import cslow_scan, cslow_vectorized, pipeline_utilization
+from .synthesis import NetworkSpec, SynthesisReport, create_top_module, synthesize
+from . import quantization
+
+__all__ = [
+    "StateSpaceModel",
+    "linear_system",
+    "mlp_forward",
+    "nn_state_space",
+    "run_direct",
+    "run_scan",
+    "compose_dense",
+    "jstep_dense_scan",
+    "linear_recurrence_assoc",
+    "linear_recurrence_chunked",
+    "linear_recurrence_serial",
+    "stepwise_dense_scan",
+    "cslow_scan",
+    "cslow_vectorized",
+    "pipeline_utilization",
+    "NetworkSpec",
+    "SynthesisReport",
+    "create_top_module",
+    "synthesize",
+    "quantization",
+]

@@ -1,0 +1,126 @@
+"""C-slow retiming (paper §III-F, Fig. 5).
+
+On an FPGA, C-slowing replaces every register of a sequential circuit with C
+registers, so C *independent* streams march through one shared datapath,
+round-robin; retiming then pushes the extra registers into the combinational
+logic to raise the clock.  The throughput story on TPU is identical —
+interleave C independent problems through one compiled datapath so the
+"pipeline" stays full:
+
+* :func:`cslow_scan` — the literal transform: one scan whose carry holds C
+  state registers and whose body touches stream ``t mod C`` at step t.
+  Property-tested equivalent to running the C streams independently.
+* :func:`cslow_vectorized` — the TPU-native realization: the C streams are
+  batched onto the leading axis so the one datapath processes all C per step
+  (the MXU is itself a systolic pipeline — feeding it C independent rows *is*
+  C-slowing at the hardware level).
+* Pipeline parallelism (``repro.parallel.pipeline``) applies the same idea
+  across devices: C microbatches interleaved through P stage datapaths.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .state_space import StateSpaceModel
+
+PyTree = Any
+
+
+def cslow_scan(
+    model: StateSpaceModel,
+    stacked_params: PyTree,
+    x0_streams: PyTree,  # leading axis C on every leaf
+    inputs_streams: PyTree | None,  # [C, N, ...] or None
+    num_streams: int,
+    length: int | None = None,
+):
+    """Run C independent streams through ONE shared datapath, round-robin.
+
+    At global cycle t, stream ``c = t mod C`` advances by one step using the
+    step-``t // C`` parameters.  The carry holds all C state registers — the
+    "C registers per original register" of Fig. 5.  Total cycles: C·N.
+
+    Returns (final_states [C, ...], outputs [C, N, ...]).
+    """
+    C = num_streams
+    if length is None:
+        length = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+    N = length
+
+    def body(carry, t):
+        states = carry  # pytree, leaves [C, ...]
+        c = t % C
+        k = t // C
+        params_k = jax.tree.map(lambda p: jax.lax.dynamic_index_in_dim(p, k, 0, keepdims=False), stacked_params) if stacked_params is not None else None
+        x_c = jax.tree.map(lambda s: jax.lax.dynamic_index_in_dim(s, c, 0, keepdims=False), states)
+        u_c = (
+            None
+            if inputs_streams is None
+            else jax.tree.map(
+                lambda u: jax.lax.dynamic_index_in_dim(
+                    jax.lax.dynamic_index_in_dim(u, c, 0, keepdims=False), k, 0, keepdims=False
+                ),
+                inputs_streams,
+            )
+        )
+        x_next = model.f(params_k, x_c, u_c, k)
+        y = model.output(params_k, x_c, u_c, k)
+        states = jax.tree.map(
+            lambda s, xn: jax.lax.dynamic_update_index_in_dim(s, xn, c, 0), states, x_next
+        )
+        return states, (c, k, y)
+
+    ts = jnp.arange(C * N, dtype=jnp.int32)
+    final_states, (cs, ks, ys) = jax.lax.scan(body, x0_streams, ts)
+
+    # De-interleave outputs back to [C, N, ...]: cycle t wrote stream t%C,
+    # step t//C — a pure reshape because the schedule is round-robin.
+    def deinterleave(y):
+        return y.reshape((N, C) + y.shape[1:]).swapaxes(0, 1)
+
+    return final_states, jax.tree.map(deinterleave, ys)
+
+
+def cslow_vectorized(
+    model: StateSpaceModel,
+    stacked_params: PyTree,
+    x0_streams: PyTree,
+    inputs_streams: PyTree | None,
+):
+    """TPU-native C-slow: vmap the datapath over the C stream axis.
+
+    Identical results, C× fewer serial steps — the composition of the paper's
+    C-slow idea with a vector datapath.  This is what the framework uses in
+    production (microbatching / batched decode)."""
+
+    def one_stream(x0, us):
+        from .state_space import run_scan
+
+        return run_scan(model, stacked_params, x0, us)
+
+    if inputs_streams is None:
+        return jax.vmap(lambda x0: one_stream(x0, None))(x0_streams)
+    return jax.vmap(one_stream)(x0_streams, inputs_streams)
+
+
+def pipeline_schedule(num_stages: int, num_microbatches: int) -> list[list[tuple[int, int]]]:
+    """The C-slow/GPipe schedule table: at clock t, stage s processes
+    microbatch t - s (if in range).  Returned as, per clock tick, a list of
+    (stage, microbatch) pairs — used by tests and the Fig. 5 benchmark to
+    count bubbles: utilization = C·P / (P·(P + C - 1))."""
+    P, C = num_stages, num_microbatches
+    table = []
+    for t in range(P + C - 1):
+        tick = [(s, t - s) for s in range(P) if 0 <= t - s < C]
+        table.append(tick)
+    return table
+
+
+def pipeline_utilization(num_stages: int, num_microbatches: int) -> float:
+    """Fraction of stage-cycles doing useful work (1 - bubble fraction)."""
+    P, C = num_stages, num_microbatches
+    return (C * P) / (P * (P + C - 1))

@@ -1,0 +1,201 @@
+"""State-space execution IR — the paper's central abstraction.
+
+A discrete-time dynamic system (paper eq. 1):
+
+    x[k+1] = f(x[k], u[k], k)
+    y[k]   = g(x[k], u[k], k)
+
+is the single execution form used by every network in this framework.  The
+paper's FPGA insight — *one* combinational datapath (f, g) time-multiplexed
+across iterations by a state register — maps onto ``jax.lax.scan``: XLA
+compiles one copy of the loop body ("the datapath") and re-uses it for every
+step, with the carry as the state register.  The fully-parallel extreme
+(every node/layer its own hardware) is the fully unrolled direct form;
+``scan(..., unroll=j)`` interpolates between the two, exactly like the
+paper's resource/speed compromise knob.
+
+Two execution styles are provided and property-tested equivalent:
+
+* :func:`run_scan`   — iterative, resource-shared (paper §IV-A case 1/middle)
+* :func:`run_direct` — unrolled, fully parallel (paper §IV-A case 2)
+
+Mealy vs Moore (paper §II-B): ``output_mode`` selects whether ``g`` sees the
+input ``u[k]`` (Mealy) or only the state (Moore).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Literal, Sequence
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+StateFn = Callable[..., PyTree]   # f(params_k, x, u, k) -> x_next
+OutputFn = Callable[..., PyTree]  # g(params_k, x, u, k) -> y
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StateSpaceModel:
+    """A discrete-time dynamic system ``(f, g, x0)``.
+
+    ``f`` and ``g`` receive ``(params_k, x, u, k)``; any of ``u``/``k`` may be
+    ignored by the callee.  ``params_k`` is the per-step parameter pytree
+    (e.g. one layer's weights); for scan execution the caller supplies
+    parameters stacked along a leading "time" axis.
+    """
+
+    f: StateFn
+    g: OutputFn
+    output_mode: Literal["mealy", "moore"] = "mealy"
+
+    # -- pytree plumbing (functions are static) --------------------------------
+    def tree_flatten(self):
+        return (), (self.f, self.g, self.output_mode)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del children
+        return cls(*aux)
+
+    def output(self, params_k, x, u, k):
+        if self.output_mode == "moore":
+            return self.g(params_k, x, None, k)
+        return self.g(params_k, x, u, k)
+
+
+def _step(model: StateSpaceModel, params_k, x, u, k):
+    x_next = model.f(params_k, x, u, k)
+    y = model.output(params_k, x, u, k)
+    return x_next, y
+
+
+def run_scan(
+    model: StateSpaceModel,
+    stacked_params: PyTree,
+    x0: PyTree,
+    inputs: PyTree | None,
+    length: int | None = None,
+    unroll: int = 1,
+    remat: bool = False,
+):
+    """Iterative (resource-shared) execution via ``lax.scan``.
+
+    Args:
+      stacked_params: parameter pytree with a leading axis of size N (one
+        slice per step), or ``None`` for parameterless systems.
+      inputs: input pytree with leading axis N, or ``None`` (autonomous).
+      length: required when both ``stacked_params`` and ``inputs`` are None.
+      unroll: the paper's resource/speed knob — j datapath copies per
+        pipeline stage (``scan`` unroll factor).
+      remat: rematerialize the body on the backward pass (activation
+        checkpointing — trades recompute for "area" a.k.a. HBM).
+
+    Returns:
+      (x_final, ys) — final state and stacked per-step outputs.
+    """
+
+    def body(carry, xs):
+        x, k = carry
+        params_k, u = xs
+        fn = _step
+        if remat:
+            fn = jax.checkpoint(_step, static_argnums=(0,))
+        x_next, y = fn(model, params_k, x, u, k)
+        return (x_next, k + 1), y
+
+    xs = (stacked_params, inputs)
+    (x_final, _), ys = jax.lax.scan(
+        body, (x0, jnp.asarray(0, jnp.int32)), xs, length=length, unroll=unroll
+    )
+    return x_final, ys
+
+
+def run_direct(
+    model: StateSpaceModel,
+    params_list: Sequence[PyTree],
+    x0: PyTree,
+    inputs: Sequence[PyTree] | None,
+):
+    """Fully-unrolled (fully-parallel) execution — the paper's max-area extreme.
+
+    Semantically identical to :func:`run_scan`; used as the equivalence
+    oracle in property tests and as the max-throughput configuration for
+    shallow systems.
+    """
+    x = x0
+    ys = []
+    n = len(params_list)
+    for k in range(n):
+        u = None if inputs is None else inputs[k]
+        x, y = _step(model, params_list[k], x, u, jnp.asarray(k, jnp.int32))
+        ys.append(y)
+    return x, ys
+
+
+def linear_system(A_provider: Callable[[Any, Any], jnp.ndarray]) -> StateSpaceModel:
+    """The paper's linear special case (eq. 4): ``x[k+1] = A[k] x[k]``."""
+
+    def f(params_k, x, u, k):
+        del u, k
+        return A_provider(params_k, None) @ x
+
+    def g(params_k, x, u, k):
+        del params_k, u, k
+        return x
+
+    return StateSpaceModel(f=f, g=g, output_mode="moore")
+
+
+# ---------------------------------------------------------------------------
+# Paper eq. (8): the NN-as-state-space form.
+# ---------------------------------------------------------------------------
+
+def nn_state_space(
+    activation: Callable[[jnp.ndarray], jnp.ndarray],
+) -> StateSpaceModel:
+    """The case-study NN written as a state-space system (paper eq. 8).
+
+        x[k+1] = f(W[k] x[k] + b[k])        (hidden propagation)
+        y      = C x[N]                     (readout, applied by caller)
+
+    ``params_k = {"W": (M, M), "b": (M,)}``; the input-injection term
+    ``β u δ[k]`` is realized by setting ``x0 = β @ u`` (the δ[k] impulse),
+    which is algebraically identical and keeps the scan body uniform.
+    """
+
+    def f(params_k, x, u, k):
+        del u, k
+        return activation(params_k["W"] @ x + params_k["b"])
+
+    def g(params_k, x, u, k):
+        del params_k, u, k
+        return x
+
+    return StateSpaceModel(f=f, g=g, output_mode="moore")
+
+
+@partial(jax.jit, static_argnames=("activation_name", "unroll"))
+def _mlp_forward_jit(stacked, x0, C, activation_name: str, unroll: int):
+    act = getattr(jnp, activation_name) if activation_name != "relu" else jax.nn.relu
+    model = nn_state_space(act)
+    xN, _ = run_scan(model, stacked, x0, None, unroll=unroll)
+    return C @ xN
+
+
+def mlp_forward(
+    W_stack: jnp.ndarray,   # [N_layers, M, M]
+    b_stack: jnp.ndarray,   # [N_layers, M]
+    beta: jnp.ndarray,      # [M, L_in]
+    C: jnp.ndarray,         # [P, M]
+    u: jnp.ndarray,         # [L_in]
+    activation_name: str = "tanh",
+    unroll: int = 1,
+) -> jnp.ndarray:
+    """End-to-end paper case-study MLP: y = C · scan(f, β·u)."""
+    x0 = beta @ u
+    return _mlp_forward_jit({"W": W_stack, "b": b_stack}, x0, C, activation_name, unroll)

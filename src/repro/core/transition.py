@@ -1,0 +1,166 @@
+"""j-step state-transition composition (paper §II-C, Fig. 3).
+
+For a linear state update ``x[k+1] = A[k] x[k]`` the j-step form
+
+    x[k+1] = Φ_{k,j} x[k-j],     Φ_{k,j} = A[k] A[k-1] ... A[k-j]
+
+is computationally advantageous: the serial dependency chain shrinks by j×
+because the Φ products have **no serial dependency on the state** and can be
+computed in parallel (on FPGA: pipelined; on TPU: batched matmuls on the MXU
+or a log-depth ``associative_scan``).  This module provides the composition
+operators, the chunked ("blocked j-step") linear recurrence that the Mamba
+Pallas kernel implements, and serial-depth accounting used by the Fig. 3
+benchmark.
+
+For *diagonal* linear recurrences with drive, ``h[t] = a[t] * h[t-1] + b[t]``
+(the SSM case), composition of two steps is
+
+    (a2, b2) ∘ (a1, b1) = (a2*a1, a2*b1 + b2)
+
+which is associative — the foundation of both ``associative_scan`` execution
+and the chunked kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Dense transition matrices
+# ---------------------------------------------------------------------------
+
+def compose_dense(A_seq: jnp.ndarray) -> jnp.ndarray:
+    """Φ = A[j-1] ··· A[0] for ``A_seq`` of shape [j, M, M] (newest last)."""
+
+    def body(phi, A_k):
+        return A_k @ phi, None
+
+    phi0 = jnp.eye(A_seq.shape[-1], dtype=A_seq.dtype)
+    phi, _ = jax.lax.scan(body, phi0, A_seq)
+    return phi
+
+
+def jstep_dense_scan(A_seq: jnp.ndarray, x0: jnp.ndarray, j: int) -> jnp.ndarray:
+    """x[N] via j-step Φ blocks: compose A's in blocks of j (parallelizable,
+    no dependency on x), then apply the T/j composed operators serially.
+
+    Equivalent to the step-by-step product; the serial chain length drops
+    from T to T/j.  Requires ``T % j == 0``.
+    """
+    T, M, _ = A_seq.shape
+    if T % j:
+        raise ValueError(f"sequence length {T} not divisible by j={j}")
+    blocks = A_seq.reshape(T // j, j, M, M)
+    # Φ for every block in parallel (vmap'd composition — the "pipelined
+    # multiplier" of Fig. 4).
+    phis = jax.vmap(compose_dense)(blocks)
+
+    def body(x, phi):
+        return phi @ x, None
+
+    xN, _ = jax.lax.scan(body, x0, phis)
+    return xN
+
+
+def stepwise_dense_scan(A_seq: jnp.ndarray, x0: jnp.ndarray) -> jnp.ndarray:
+    """Reference serial execution x[k+1] = A[k] x[k]."""
+
+    def body(x, A_k):
+        return A_k @ x, None
+
+    xN, _ = jax.lax.scan(body, x0, A_seq)
+    return xN
+
+
+# ---------------------------------------------------------------------------
+# Diagonal (elementwise) affine recurrences — the SSM workhorse
+# ---------------------------------------------------------------------------
+
+def affine_compose(e1: Tuple[jnp.ndarray, jnp.ndarray], e2: Tuple[jnp.ndarray, jnp.ndarray]):
+    """Associative composition of h -> a*h + b elements (e2 applied after e1)."""
+    a1, b1 = e1
+    a2, b2 = e2
+    return a2 * a1, a2 * b1 + b2
+
+
+def linear_recurrence_serial(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """h[t] = a[t]*h[t-1] + b[t], returned for all t.  Shapes: a,b [T, ...]."""
+
+    def body(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    _, hs = jax.lax.scan(body, h0, (a, b))
+    return hs
+
+
+def linear_recurrence_assoc(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray) -> jnp.ndarray:
+    """Same recurrence via log-depth associative scan over (a, b) pairs.
+
+    This is the maximal-j limit of the paper's Φ pipelining: every prefix
+    Φ_{t,0} is formed by a balanced tree of compositions.
+    """
+    # Fold h0 into the first drive term: h[0] = a[0]*h0 + b[0].
+    b0 = a[0] * h0 + b[0]
+    b = jnp.concatenate([b0[None], b[1:]], axis=0)
+    a = jnp.concatenate([jnp.ones_like(a[:1]), a[1:]], axis=0)
+    _, hs = jax.lax.associative_scan(affine_compose, (a, b), axis=0)
+    return hs
+
+
+def linear_recurrence_chunked(
+    a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray, chunk: int
+) -> jnp.ndarray:
+    """Blocked j-step execution (j = ``chunk``), the pattern the Pallas
+    ``ssm_scan`` kernel implements on TPU.
+
+    Within each chunk the cumulative products ``cumprod(a)`` (= the diagonal
+    Φ_{t,j}) and chunk-local outputs are computed in parallel; only one
+    carry crosses chunk boundaries, so the serial chain is T/chunk long.
+    """
+    T = a.shape[0]
+    if T % chunk:
+        raise ValueError(f"T={T} not divisible by chunk={chunk}")
+    n = T // chunk
+    a_c = a.reshape((n, chunk) + a.shape[1:])
+    b_c = b.reshape((n, chunk) + b.shape[1:])
+
+    # Per-chunk prefix quantities, all parallel over chunks (vmap) and
+    # log-depth inside the chunk (cumulative ops).
+    def chunk_prefix(a_k, b_k):
+        # p[t] = prod_{s<=t} a_k[s]   (diagonal Φ of the chunk prefix)
+        p = jnp.cumprod(a_k, axis=0)
+        # q[t] = sum_{s<=t} (prod_{r>s} a_k[r]) b_k[s]  — drive accumulated
+        # through the remaining decays; computed stably as p[t] * cumsum(b/p).
+        q = p * jnp.cumsum(b_k / jnp.where(p == 0, 1, p), axis=0)
+        return p, q
+
+    p, q = jax.vmap(chunk_prefix)(a_c, b_c)  # [n, chunk, ...]
+
+    # Serial carry across chunks: h_end[i] = p[i,-1]*h_end[i-1] + q[i,-1].
+    def body(h, pq):
+        p_last, q_last = pq
+        h_new = p_last * h + q_last
+        return h_new, h  # emit the *incoming* boundary state
+
+    _, h_in = jax.lax.scan(body, h0, (p[:, -1], q[:, -1]))  # [n, ...]
+
+    hs = p * h_in[:, None] + q  # broadcast boundary state into each chunk
+    return hs.reshape((T,) + a.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# Serial-depth accounting (the TPU analog of critical-path / Fmax)
+# ---------------------------------------------------------------------------
+
+def serial_depth_estimate(T: int, j: int) -> int:
+    """Dependency-chain length of the j-step form: T/j serial applications
+    (+ log2(j) tree depth inside each Φ composition, which pipelines)."""
+    import math
+
+    return T // j + max(0, math.ceil(math.log2(max(j, 1))))

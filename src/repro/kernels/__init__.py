@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots, each with a jnp oracle.
+
+  ssm_scan        — chunked selective scan (the paper's j-step Φ pipelining)
+  flash_attention — blocked online-softmax attention (causal/local/GQA/softcap)
+  int8_matmul     — fixed-point MACC matmul (DSP48E1 → MXU int8 path)
+  tanh_lut        — ROM-LUT activation via one-hot MXU gather (§IV-B)
+
+All kernels ship ops.py (jit wrapper, INTERPRET switch) and ref.py (oracle);
+tests sweep shapes/dtypes in interpret mode against the oracle.
+"""

@@ -1,0 +1,18 @@
+"""Jit'd public wrapper for the flash-attention kernel."""
+
+from __future__ import annotations
+
+from . import kernel as _k
+from .ref import flash_attention_ref
+
+INTERPRET = True  # CPU container; flip on TPU
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    bq=_k.DEFAULT_BQ, bk=_k.DEFAULT_BK, interpret=None):
+    itp = INTERPRET if interpret is None else interpret
+    return _k.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, bq=bq, bk=bk, interpret=itp)
+
+
+__all__ = ["flash_attention", "flash_attention_ref", "INTERPRET"]

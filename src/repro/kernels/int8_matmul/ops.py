@@ -1,0 +1,29 @@
+"""Jit'd wrappers: raw int8 matmul + float->int8 quantized matmul."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel as _k
+from .ref import int8_matmul_ref, quantize_matmul_ref
+
+INTERPRET = True  # CPU container; flip on TPU
+
+
+def int8_matmul(a_q, b_q, a_scale, b_scale, *, interpret=None, **kw):
+    itp = INTERPRET if interpret is None else interpret
+    return _k.int8_matmul(a_q, b_q, a_scale, b_scale, interpret=itp, **kw)
+
+
+def quantized_matmul(a, b, *, interpret=None, **kw):
+    """Float API: per-row(M)/per-col(N) symmetric int8, int32 MACC."""
+    a_s = jnp.maximum(jnp.max(jnp.abs(a), axis=1, keepdims=True), 1e-8) / 127.0
+    b_s = jnp.maximum(jnp.max(jnp.abs(b), axis=0, keepdims=True), 1e-8) / 127.0
+    a_q = jnp.clip(jnp.round(a / a_s), -127, 127).astype(jnp.int8)
+    b_q = jnp.clip(jnp.round(b / b_s), -127, 127).astype(jnp.int8)
+    return int8_matmul(a_q, b_q, a_s.astype(jnp.float32), b_s.astype(jnp.float32),
+                       interpret=interpret, **kw)
+
+
+__all__ = ["int8_matmul", "quantized_matmul", "int8_matmul_ref",
+           "quantize_matmul_ref", "INTERPRET"]

@@ -1,0 +1,28 @@
+"""Oracle for the fixed-point MACC matmul: int8 × int8 → int32 → f32.
+
+The TPU analog of the paper's DSP48E1 slice (§IV-B): quantized operands,
+wide accumulator, requantize at the end.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_matmul_ref(a_q, b_q, a_scale, b_scale):
+    """a_q: [M,K] int8, b_q: [K,N] int8, a_scale: [M,1] f32, b_scale: [1,N].
+    Returns f32 [M,N] ≈ (a_q·a_scale) @ (b_q·b_scale)."""
+    acc = jnp.dot(a_q.astype(jnp.int32), b_q.astype(jnp.int32),
+                  preferred_element_type=jnp.int32)
+    return acc.astype(jnp.float32) * a_scale * b_scale
+
+
+def quantize_matmul_ref(a, b):
+    """Float API: per-row/per-col symmetric int8 quantized matmul."""
+    a_amax = jnp.maximum(jnp.max(jnp.abs(a), axis=1, keepdims=True), 1e-8)
+    b_amax = jnp.maximum(jnp.max(jnp.abs(b), axis=0, keepdims=True), 1e-8)
+    a_s = a_amax / 127.0
+    b_s = b_amax / 127.0
+    a_q = jnp.clip(jnp.round(a / a_s), -127, 127).astype(jnp.int8)
+    b_q = jnp.clip(jnp.round(b / b_s), -127, 127).astype(jnp.int8)
+    return int8_matmul_ref(a_q, b_q, a_s, b_s)

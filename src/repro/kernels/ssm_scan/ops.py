@@ -1,0 +1,28 @@
+"""Jit'd public wrapper for the chunked selective-scan kernel."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import kernel as _k
+from .ref import ssm_scan_ref
+
+# Global switch: tests force interpret mode (CPU); TPU deployments leave it
+# False.  The jnp oracle is always available as ssm_scan_ref.
+INTERPRET = True  # this container is CPU-only; flip on TPU
+
+
+def ssm_scan(x, delta, A, B, C, h0=None, *, chunk: int = _k.DEFAULT_CHUNK,
+             block_d: int = _k.DEFAULT_BLOCK_D, w: int = _k.DEFAULT_W,
+             interpret: bool | None = None):
+    """y, h_final = chunked selective scan (see kernel.py for the math)."""
+    if h0 is not None and bool((abs(h0) > 0).any()):
+        raise NotImplementedError("kernel path requires h0 == 0; use ref for resume")
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], x.shape[2], B.shape[-1]), jnp.float32)
+    itp = INTERPRET if interpret is None else interpret
+    return _k.ssm_scan(x, delta, A, B, C, h0, chunk=chunk, block_d=block_d,
+                       w=w, interpret=itp)
+
+
+__all__ = ["ssm_scan", "ssm_scan_ref", "INTERPRET"]

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the chunked selective scan (Mamba-1 inner recurrence).
+
+Contract (matches kernel and ops):
+    y, h_final = ssm_scan(x, delta, A, B, C, h0)
+      x, delta : [Bsz, T, D]     (post-conv activations, softplus'd Δ)
+      A        : [D, N]          (negative; A = -exp(A_log))
+      B, C     : [Bsz, T, N]
+      h0       : [Bsz, D, N]
+    recurrence: h[t] = exp(Δ_t ⊙ A) ⊙ h[t-1] + (Δ_t x_t) ⊙ B_t
+                y[t] = Σ_n h[t] C_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(x, delta, A, B, C, h0):
+    x = x.astype(jnp.float32)
+    delta = delta.astype(jnp.float32)
+    B = B.astype(jnp.float32)
+    C = C.astype(jnp.float32)
+    A = A.astype(jnp.float32)
+
+    def per_batch(xb, db, Bb, Cb, h):
+        def step(h, s):
+            x_t, d_t, B_t, C_t = s
+            a = jnp.exp(d_t[:, None] * A)          # [D,N]
+            h = a * h + (d_t * x_t)[:, None] * B_t[None, :]
+            y = h @ C_t                             # [D]
+            return h, y
+
+        h, ys = jax.lax.scan(step, h, (xb, db, Bb, Cb))
+        return h, ys
+
+    h_final, ys = jax.vmap(per_batch)(x, delta, B, C, h0.astype(jnp.float32))
+    return ys, h_final

@@ -1,0 +1,16 @@
+"""Jit'd wrapper for the LUT-tanh kernel."""
+
+from __future__ import annotations
+
+from . import kernel as _k
+from .ref import make_lut, tanh_lut_ref
+
+INTERPRET = True  # CPU container; flip on TPU
+
+
+def tanh_lut(x, lut, *, block=_k.DEFAULT_BLOCK, interpret=None):
+    itp = INTERPRET if interpret is None else interpret
+    return _k.tanh_lut(x, lut, block=block, interpret=itp)
+
+
+__all__ = ["tanh_lut", "tanh_lut_ref", "make_lut", "INTERPRET"]

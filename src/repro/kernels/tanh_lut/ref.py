@@ -1,0 +1,24 @@
+"""Oracle for the LUT-tanh kernel (paper §IV-B: ROM LUT + interpolation)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+RANGE = 4.0
+
+
+def make_lut(addr_bits: int) -> jnp.ndarray:
+    n = 2 ** addr_bits
+    centers = (jnp.arange(n, dtype=jnp.float32) + 0.5) / n * (2 * RANGE) - RANGE
+    return jnp.tanh(centers)
+
+
+def tanh_lut_ref(x, lut):
+    """Clamp to ±RANGE, linear-interpolate between the two nearest entries."""
+    n = lut.shape[0]
+    xf = jnp.clip(x.astype(jnp.float32), -RANGE, RANGE - 1e-6)
+    pos = (xf + RANGE) / (2 * RANGE) * n - 0.5
+    i0 = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, n - 1)
+    i1 = jnp.minimum(i0 + 1, n - 1)
+    frac = pos - i0.astype(jnp.float32)
+    return (lut[i0] * (1 - frac) + lut[i1] * frac).astype(x.dtype)

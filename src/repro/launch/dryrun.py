@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces:
+  * proof that the sharding plan compiles for the production meshes
+    (16×16 single pod and 2×16×16 multi-pod),
+  * ``memory_analysis()`` (fits-in-HBM evidence),
+  * ``cost_analysis()`` FLOPs/bytes for the §Roofline terms,
+  * collective-bytes by op kind, parsed from the post-SPMD HLO,
+  * a JSON artifact under ``experiments/dryrun/`` consumed by
+    ``benchmarks/roofline.py`` and EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k --mesh pod
+  python -m repro.launch.dryrun --all [--mesh both] [--skip-existing]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro import optim
+from repro.configs import ARCH_IDS, get_config
+from repro.launch import steps as steps_lib
+from repro.launch.mesh import make_production_mesh
+from repro.models.config import ALL_SHAPES, applicable_shapes
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "experiments", "dryrun")
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all", "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _op_bytes(shape_str: str) -> int:
+    """Total bytes of all tensors in an HLO shape string like
+    'bf16[4,128]{1,0}' or '(f32[2,3], bf16[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in optimized HLO.
+
+    Per-device semantics: post-SPMD HLO shapes are per-partition, so the
+    sums are bytes per device, matching the roofline normalization.
+    """
+    stats: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        # match e.g.:  %ag = bf16[64,128]{1,0} all-gather(...)
+        m = re.search(r"=\s+(\([^)]*\)|\S+)\s+([\w-]+)", ls)
+        if not m:
+            continue
+        op = m.group(2)
+        if op.rstrip("-start").rstrip("-done") in _COLLECTIVES or op in _COLLECTIVES \
+           or any(op == c + sfx for c in _COLLECTIVES for sfx in ("", "-start", "-done")):
+            base = op.replace("-start", "").replace("-done", "")
+            if op.endswith("-done"):
+                continue  # avoid double count of start/done pairs
+            b = _op_bytes(m.group(1))
+            s = stats.setdefault(base, {"count": 0, "bytes": 0})
+            s["count"] += 1
+            s["bytes"] += b
+    return stats
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 1,
+             overrides: dict | None = None, constrain_acts: bool = False,
+             seq_axis: str | None = None) -> dict:
+    cfg = steps_lib.dryrun_config(get_config(arch), **(overrides or {}))
+    shape = {s.name: s for s in ALL_SHAPES}[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+
+    t0 = time.perf_counter()
+    lowered = steps_lib.lower_cell(cfg, shape, mesh, optim.AdamWConfig(),
+                                   microbatches=microbatches,
+                                   constrain_acts=constrain_acts,
+                                   seq_axis=seq_axis)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": n_dev,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "microbatches": microbatches,
+    }
+    try:
+        cost = compiled.cost_analysis()
+        rec["cost_analysis"] = {
+            k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float)) and (k in ("flops", "bytes accessed") or k.startswith("bytes accessed"))
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = str(e)
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes")
+            if hasattr(mem, k)
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = str(e)
+    try:
+        hlo = compiled.as_text()
+        rec["collectives"] = collective_stats(hlo)
+        rec["hlo_bytes"] = len(hlo)
+        # trip-count-aware analysis: cost_analysis counts while bodies ONCE;
+        # these are the corrected per-device totals used by §Roofline.
+        from repro.launch import hlo_analysis
+
+        st = hlo_analysis.analyze(hlo)
+        rec["flops_corrected"] = st.flops
+        rec["memory_traffic"] = st.memory_traffic
+        rec["collectives_corrected"] = {
+            k: {"bytes": st.collective_bytes[k],
+                "count": st.collective_counts.get(k, 0)}
+            for k in st.collective_bytes
+        }
+        rec["while_trips"] = st.while_trips
+    except Exception as e:  # pragma: no cover
+        rec["collectives_error"] = str(e)
+    return rec
+
+
+def save_record(rec: dict, out_dir: str) -> str:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}"
+    if rec.get("tag"):
+        name += f"__{rec['tag']}"
+    path = os.path.join(out_dir, name + ".json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=[s.name for s in ALL_SHAPES])
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"], default="pod")
+    ap.add_argument("--all", action="store_true", help="every applicable cell")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--out", default=os.path.abspath(OUT_DIR))
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--constrain-acts", action="store_true",
+                    help="pin activations to batch-over-DP (hillclimb knob)")
+    ap.add_argument("--seq-axis", default=None,
+                    help="additionally shard activation seq dim over this axis (SP)")
+    ap.add_argument("--pure-dp", action="store_true",
+                    help="no TP: weights replicated over model, batch over all axes")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing in the group scan")
+    ap.add_argument("--ssm-chunk", type=int, default=0,
+                    help="mamba chunk length (the j knob; 0 = default)")
+    ap.add_argument("--moe-group", type=int, default=0,
+                    help="MoE dispatch group size (0 = 2048 default)")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for s in applicable_shapes(get_config(arch)):
+                cells.append((arch, s.name))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch/--shape or --all required")
+        cells = [(args.arch, args.shape)]
+
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch, shape in cells:
+        for mp in meshes:
+            mesh_name = "2x16x16" if mp else "16x16"
+            fname = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}"
+                                 + (f"__{args.tag}" if args.tag else "") + ".json")
+            if args.skip_existing and os.path.exists(fname):
+                print(f"[skip] {arch} {shape} {mesh_name}")
+                continue
+            try:
+                overrides = {}
+                if args.pure_dp:
+                    overrides["pure_dp"] = True
+                if args.no_remat:
+                    overrides["remat"] = False
+                if args.ssm_chunk:
+                    overrides["ssm_chunk"] = args.ssm_chunk
+                if args.moe_group:
+                    overrides["moe_group_size"] = args.moe_group
+                rec = run_cell(arch, shape, mp, microbatches=args.microbatches,
+                               overrides=overrides,
+                               constrain_acts=args.constrain_acts,
+                               seq_axis=args.seq_axis)
+                rec["tag"] = args.tag
+                p = save_record(rec, args.out)
+                mm = rec.get("memory_analysis", {})
+                per_dev = (mm.get("argument_size_in_bytes", 0) + mm.get("temp_size_in_bytes", 0))
+                print(f"[ok]   {arch} {shape} {mesh_name} "
+                      f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                      f"flops={rec.get('cost_analysis', {}).get('flops', 'n/a'):.3e} "
+                      f"-> {p}")
+            except Exception:
+                failures += 1
+                print(f"[FAIL] {arch} {shape} {mesh_name}")
+                traceback.print_exc()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; ``dryrun.py`` sets ``--xla_force_host_platform_device_count=512``
+*before* importing anything else.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """TPU v5e pod mesh: 16×16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ``data`` (DP/FSDP/ZeRO), ``model`` (TP/EP), plus ``pod`` (plain DP
+    across pods — gradients all-reduce over the DCI) in the multi-pod case.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """All local devices as ("pod","data","model") = (1,1,N) — lets the same
+    sharded program run on one host (smoke tests, examples)."""
+    import numpy as np
+
+    devs = np.array(jax.devices())
+    return jax.sharding.Mesh(devs.reshape(1, 1, -1), ("pod", "data", "model"))
+
+
+# Hardware constants for the roofline model (TPU v5e per chip).
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_BW_PER_LINK = 50e9          # bytes/s per link (~45-50 GB/s on v5e)

@@ -1,0 +1,202 @@
+"""Step functions + ShapeDtypeStruct input specs for every (arch × shape).
+
+``input_specs(cfg, shape)`` returns weak-type-correct, shardable stand-ins —
+no device allocation — for:
+
+  * train_4k      → train_step(params, opt_state, batch) (fwd+bwd+AdamW)
+  * prefill_32k   → prefill_step(params, batch) → (last logits, caches)
+  * decode_32k /
+    long_500k     → serve_step(params, tokens, caches, pos) (1 new token
+                    against a seq_len-deep cache/SSM state)
+
+Modality frontends are stubs per the task spec: hubert gets precomputed
+frame embeddings, llama-vision gets precomputed patch embeddings as
+cross-attention memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.models import lm
+from repro.models.config import ModelConfig, ShapeSpec
+from repro.parallel import sharding as shd
+
+PyTree = Any
+
+
+def dryrun_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """bf16 weights/activations for production realism."""
+    return dataclasses.replace(
+        cfg, dtype="bfloat16", param_dtype="bfloat16", **overrides
+    )
+
+
+# ---------------------------------------------------------------------------
+# shape structs (no allocation anywhere)
+# ---------------------------------------------------------------------------
+
+def _struct(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def param_structs(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(lambda k: lm.init_params(cfg, k), jax.random.key(0))
+
+
+def opt_structs(params: PyTree) -> PyTree:
+    return jax.eval_shape(optim.init, params)
+
+
+def cache_structs(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    return jax.eval_shape(lambda: lm.init_cache(cfg, batch, max_seq))
+
+
+def batch_structs(cfg: ModelConfig, shape: ShapeSpec) -> PyTree:
+    B, S = shape.global_batch, shape.seq_len
+    bs: dict[str, Any] = {}
+    if cfg.family == "encoder":
+        bs["embeds"] = _struct((B, S, cfg.frontend_dim), cfg.act_dtype)
+    else:
+        bs["tokens"] = _struct((B, S), jnp.int32)
+    if shape.kind == "train":
+        bs["labels"] = _struct((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        bs["memory"] = _struct((B, cfg.frontend_tokens, cfg.frontend_dim), cfg.act_dtype)
+    return bs
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, PyTree]:
+    """All step inputs as ShapeDtypeStructs, keyed by argument name."""
+    if shape.kind == "train":
+        params = param_structs(cfg)
+        return {
+            "params": params,
+            "opt_state": opt_structs(params),
+            "batch": batch_structs(cfg, shape),
+        }
+    if shape.kind == "prefill":
+        return {"params": param_structs(cfg), "batch": batch_structs(cfg, shape)}
+    # decode: one token against a seq_len-deep cache
+    B = shape.global_batch
+    toks = {"tokens": _struct((B, 1), jnp.int32)}
+    if cfg.family == "vlm":
+        toks["memory"] = _struct((B, cfg.frontend_tokens, cfg.frontend_dim), cfg.act_dtype)
+    return {
+        "params": param_structs(cfg),
+        "batch": toks,
+        "caches": cache_structs(cfg, B, shape.seq_len),
+        "pos": _struct((), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, ocfg: optim.AdamWConfig, microbatches: int = 1):
+    def train_step(params, opt_state, batch):
+        loss_fn = lambda p, b: lm.train_loss(p, cfg, b)
+        loss, grads, _ = optim.accumulate_grads(loss_fn, params, batch, microbatches)
+        new_params, new_opt, om = optim.apply(ocfg, grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, "grad_norm": om["grad_norm"]}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        inputs = batch.get("embeds", batch.get("tokens"))
+        return lm.prefill(params, cfg, inputs, memory=batch.get("memory"))
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, batch, caches, pos):
+        return lm.decode_step(
+            params, cfg, batch["tokens"], caches, pos, memory=batch.get("memory")
+        )
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# sharding plans per step
+# ---------------------------------------------------------------------------
+
+def _ns(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree)
+
+
+def plan_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, specs: dict):
+    """NamedSharding pytrees matching ``input_specs`` for this cell."""
+    pspec = shd.param_specs(cfg, specs["params"], mesh)
+    out = {"params": _ns(mesh, pspec)}
+    if shape.kind == "train":
+        out["opt_state"] = optim.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=_ns(mesh, pspec),
+            v=_ns(mesh, pspec),
+        )
+    out["batch"] = _ns(mesh, shd.batch_specs(cfg, shape, mesh, specs["batch"]))
+    if shape.kind == "decode":
+        shard_seq = shape.global_batch < mesh.shape.get("data", 1)
+        out["caches"] = _ns(
+            mesh, shd.cache_specs(cfg, specs["caches"], mesh, shard_seq=shard_seq)
+        )
+        out["pos"] = NamedSharding(mesh, P())
+    return out
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+               ocfg: optim.AdamWConfig | None = None, microbatches: int = 1,
+               constrain_acts: bool = False, seq_axis: str | None = None):
+    """Build + lower one (arch × shape × mesh) cell.  Returns jax.stages.Lowered.
+
+    ``constrain_acts`` pins per-group activations to batch-over-DP sharding
+    (hillclimb knob — stops SPMD from replicating attention); ``seq_axis``
+    additionally shards the sequence dim (Megatron-style SP) over that axis.
+    """
+    import contextlib
+
+    from repro.parallel.sharding import activation_constraints
+
+    specs = input_specs(cfg, shape)
+    sh = plan_shardings(cfg, shape, mesh, specs)
+    batch_axes = None
+    if cfg.pure_dp and "model" in mesh.axis_names:
+        from repro.parallel.sharding import dp_axes as _dpa
+
+        batch_axes = _dpa(mesh) + ("model",)
+    ctx = (
+        activation_constraints(mesh, seq_axis=seq_axis, batch_axes=batch_axes)
+        if constrain_acts
+        else contextlib.nullcontext()
+    )
+    with mesh, ctx:
+        if shape.kind == "train":
+            fn = make_train_step(cfg, ocfg or optim.AdamWConfig(), microbatches)
+            jfn = jax.jit(
+                fn,
+                in_shardings=(sh["params"], sh["opt_state"], sh["batch"]),
+                donate_argnums=(0, 1),
+            )
+            return jfn.lower(specs["params"], specs["opt_state"], specs["batch"])
+        if shape.kind == "prefill":
+            fn = make_prefill_step(cfg)
+            jfn = jax.jit(fn, in_shardings=(sh["params"], sh["batch"]))
+            return jfn.lower(specs["params"], specs["batch"])
+        fn = make_serve_step(cfg)
+        jfn = jax.jit(
+            fn,
+            in_shardings=(sh["params"], sh["batch"], sh["caches"], sh["pos"]),
+            donate_argnums=(2,),
+        )
+        return jfn.lower(specs["params"], specs["batch"], specs["caches"], specs["pos"])

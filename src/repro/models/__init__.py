@@ -1,0 +1,17 @@
+"""Model zoo: layers, attention variants, MoE, SSMs, and the LM assembly."""
+
+from . import attention, config, layers, lm, moe, ssm, transformer
+from .config import ModelConfig, ShapeSpec, applicable_shapes
+
+__all__ = [
+    "attention",
+    "config",
+    "layers",
+    "lm",
+    "moe",
+    "ssm",
+    "transformer",
+    "ModelConfig",
+    "ShapeSpec",
+    "applicable_shapes",
+]

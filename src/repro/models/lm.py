@@ -1,0 +1,188 @@
+"""Top-level language / encoder / VLM model: embed → scan(groups) → head.
+
+The whole network is one state-space system (paper eq. 8):
+  * training/prefill: state = activations x[k] flowing across layer-groups k
+    (layers-as-time; the scan is the paper's shared datapath),
+  * decode: state = (KV caches / SSM states); one serve_step is one
+    application of the state-update map f with the new token as input u[k].
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain_activation
+
+from .config import ModelConfig
+from .layers import dense_init, embed, embedding_params, rmsnorm, rmsnorm_params
+from .transformer import (
+    apply_block,
+    group_params,
+    init_cache,
+    shared_block_params,
+    tail_params,
+)
+
+PyTree = Any
+
+__all__ = [
+    "init_params",
+    "forward",
+    "train_loss",
+    "prefill",
+    "decode_step",
+    "init_cache",
+    "param_count",
+]
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    ks = jax.random.split(key, 5)
+    params: dict[str, Any] = {}
+    if cfg.family == "encoder":
+        # audio frontend stub: precomputed frame embeddings -> linear proj
+        params["embed"] = {"proj": dense_init(ks[0], (cfg.frontend_dim, cfg.d_model), cfg.p_dtype)}
+    else:
+        params["embed"] = embedding_params(ks[0], cfg.vocab, cfg.d_model, cfg.p_dtype)
+
+    gkeys = jax.random.split(ks[1], cfg.n_groups)
+    params["groups"] = jax.vmap(lambda k: group_params(k, cfg))(gkeys)
+
+    shared = shared_block_params(ks[2], cfg)
+    if shared is not None:
+        params["shared"] = shared
+
+    tail = tail_params(ks[4], cfg)
+    if tail is not None:
+        params["tail"] = tail
+
+    params["final_norm"] = rmsnorm_params(cfg.d_model, cfg.p_dtype)
+    if not cfg.tie_embeddings:
+        params["head"] = {"w": dense_init(ks[3], (cfg.d_model, cfg.vocab), cfg.p_dtype)}
+    return params
+
+
+def param_count(params: PyTree) -> int:
+    return sum(int(p.size) for p in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# group scan
+# ---------------------------------------------------------------------------
+
+def _apply_groups(params, cfg: ModelConfig, x, *, memory, caches, pos, mode):
+    pattern = cfg.layer_pattern
+    shared = params.get("shared")
+
+    def group_body(carry, xs):
+        h, aux = carry
+        h = constrain_activation(h)  # pin batch-over-DP each group (no-op on 1 dev)
+        p_grp, cache_grp = xs
+        new_caches = {}
+        for i, kind in enumerate(pattern):
+            name = f"b{i}_{kind}"
+            c_in = None if cache_grp is None else cache_grp.get(name)
+            h, c_out, aux_i = apply_block(
+                p_grp[name], shared, cfg, kind, h,
+                memory=memory, cache=c_in, pos=pos, mode=mode,
+            )
+            aux = aux + aux_i
+            new_caches[name] = c_out if c_out is not None else jnp.zeros((), jnp.float32)
+        return (h, aux), new_caches
+
+    body = group_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(group_body)
+
+    xs = (params["groups"], None if caches is None else caches["groups"])
+    (h, aux), out_group_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs, unroll=cfg.scan_unroll
+    )
+
+    out_caches = {"groups": out_group_caches}
+    if cfg.tail_pattern:
+        tail_in = None if caches is None else caches.get("tail")
+        tail_out = {}
+        for i, kind in enumerate(cfg.tail_pattern):
+            name = f"t{i}_{kind}"
+            c_in = None if tail_in is None else tail_in.get(name)
+            h, c_out, aux_i = apply_block(
+                params["tail"][name], shared, cfg, kind, h,
+                memory=memory, cache=c_in, pos=pos, mode=mode,
+            )
+            aux = aux + aux_i
+            if c_out is not None:
+                tail_out[name] = c_out
+        if tail_out:
+            out_caches["tail"] = tail_out
+    return h, aux, out_caches
+
+
+def _embed_in(params, cfg: ModelConfig, tokens_or_embeds):
+    if cfg.family == "encoder":
+        return tokens_or_embeds.astype(cfg.act_dtype) @ params["embed"]["proj"]
+    return embed(params["embed"], tokens_or_embeds).astype(cfg.act_dtype)
+
+
+def _head(params, cfg: ModelConfig, h):
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        return h @ params["embed"]["table"].T
+    return h @ params["head"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward(params, cfg: ModelConfig, tokens, *, memory=None, mode="train"):
+    """Full-sequence forward.  mode: "train" (no caches) | "prefill"."""
+    x = _embed_in(params, cfg, tokens)
+    caches = None
+    h, aux, out_caches = _apply_groups(
+        params, cfg, x, memory=memory, caches=caches, pos=None, mode=mode
+    )
+    logits = _head(params, cfg, h)
+    if mode == "prefill":
+        return logits, out_caches, aux
+    return logits, aux
+
+
+def train_loss(params, cfg: ModelConfig, batch, z_loss_coef: float = 1e-4):
+    """batch: {"tokens": [B,S] or "embeds": [B,S,F], "labels": [B,S],
+    optional "memory": [B,M,F]} → (loss, metrics)."""
+    inputs = batch.get("embeds", batch.get("tokens"))
+    logits, aux = forward(params, cfg, inputs, memory=batch.get("memory"), mode="train")
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].clip(0), axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = jnp.sum((lse - gold) * mask) / denom
+    zl = jnp.sum(jnp.square(lse) * mask) / denom
+    loss = ce + z_loss_coef * zl + cfg.router_aux_coef * aux
+    return loss, {"ce": ce, "z_loss": zl, "router_aux": aux}
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, memory=None):
+    """Returns (last-token logits, caches) — cache seeding for serving."""
+    logits, caches, _ = forward(params, cfg, tokens, memory=memory, mode="prefill")
+    return logits[:, -1], caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens, caches, pos, *, memory=None):
+    """One serving step: tokens [B,1] at position(s) ``pos`` (scalar or [B]).
+
+    This is f(x[k], u[k]) of the serving state-space system: the caches are
+    the state, the token is the input, the logits are g's output.
+    """
+    x = _embed_in(params, cfg, tokens)
+    h, _, out_caches = _apply_groups(
+        params, cfg, x, memory=memory, caches=caches, pos=pos, mode="decode"
+    )
+    logits = _head(params, cfg, h)
+    return logits[:, -1], out_caches

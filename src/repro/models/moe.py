@@ -1,0 +1,108 @@
+"""Mixture-of-Experts FFN (deepseek-v2-lite, olmoe) — GShard-style capacity
+dispatch, SPMD-shardable for expert parallelism.
+
+Dispatch uses the einsum/one-hot formulation (t5x/GShard lineage): tokens are
+split into groups of ``group_size``; within each group every token picks
+top-k experts, claims a capacity slot, and is dispatched/combined by two
+einsums.  Under pjit with tokens sharded over ``data`` and the expert axis of
+the weights sharded over ``model``, XLA SPMD emits the canonical all-to-all
+pair — the collective the §Roofline analysis tracks for MoE cells.
+
+The router state (expert assignments) is part of the layer's *combinational
+logic* in the paper's language; no sequential state is carried, so MoE layers
+drop into the layers-as-scan schedule unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, mlp_apply, mlp_params
+
+PyTree = Any
+
+
+def moe_params(key, cfg: ModelConfig) -> PyTree:
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),  # router kept f32
+        "w_in": dense_init(ks[1], (E, D, F), cfg.p_dtype),
+        "w_gate": dense_init(ks[2], (E, D, F), cfg.p_dtype),
+        "w_out": dense_init(ks[3], (E, F, D), cfg.p_dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_params(
+            ks[4], D, cfg.n_shared_experts * F, gated=True, dtype=cfg.p_dtype
+        )
+    return p
+
+
+def _capacity(group_size: int, cfg: ModelConfig) -> int:
+    cap = int(group_size * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(cap, cfg.top_k)
+
+
+def route(p, cfg: ModelConfig, x):
+    """x: [..., D] → (top-k expert ids, normalized weights, aux loss, probs)."""
+    logits = x.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, cfg.top_k)
+    top_w = top_w / jnp.maximum(jnp.sum(top_w, -1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance loss: E · Σ_e fraction_e · mean_prob_e
+    E = cfg.n_experts
+    f = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_e, E, dtype=jnp.float32), axis=-2), axis=tuple(range(top_e.ndim - 1))
+    ) / cfg.top_k
+    pbar = jnp.mean(probs, axis=tuple(range(probs.ndim - 1)))
+    aux = E * jnp.sum(f * pbar)
+    return top_e, top_w.astype(x.dtype), aux
+
+
+def moe_apply(p, cfg: ModelConfig, x, group_size: int = 2048):
+    """x: [B, S, D] → (y, aux_loss).  Capacity-based top-k dispatch."""
+    B, S, D = x.shape
+    T = B * S
+    g = min(group_size, T)
+    while T % g:
+        g //= 2
+    G = T // g
+    xt = x.reshape(G, g, D)
+
+    top_e, top_w, aux = route(p, cfg, xt)        # [G,g,k] ids / weights
+    E, k = cfg.n_experts, cfg.top_k
+    C = _capacity(g, cfg)
+
+    # Slot assignment: position of each (token, choice) within its expert's
+    # queue, computed with a running count over the flattened (token-major)
+    # choice order — deterministic, drop-beyond-capacity.
+    e_onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)          # [G,g,k,E]
+    flat = e_onehot.reshape(G, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                          # slots before me
+    slot = jnp.sum(pos * flat, axis=-1).reshape(G, g, k)           # [G,g,k]
+    keep = slot < C
+
+    # dispatch/combine tensors, [G, g, E, C]; the k axis is contracted inside
+    # the einsum (batched matmul) so the [g,k,E,C] outer product is never
+    # materialized.
+    slot_oh = jax.nn.one_hot(jnp.where(keep, slot, C), C, dtype=x.dtype)  # OOB→drop
+    e_oh = e_onehot.astype(x.dtype)
+    dispatch = jnp.einsum("Gtke,Gtkc->Gtec", e_oh, slot_oh)
+    combine = jnp.einsum("Gtke,Gtkc->Gtec", e_oh * top_w[..., None], slot_oh)
+
+    xe = jnp.einsum("Gtec,Gtd->Gecd", dispatch, xt)                # [G,E,C,D]
+    h = jnp.einsum("Gecd,edf->Gecf", xe, p["w_in"])
+    hg = jnp.einsum("Gecd,edf->Gecf", xe, p["w_gate"])
+    h = jax.nn.silu(hg) * h
+    ye = jnp.einsum("Gecf,efd->Gecd", h, p["w_out"])               # [G,E,C,D]
+    y = jnp.einsum("Gtec,Gecd->Gtd", combine, ye)
+
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], xt, act=cfg.mlp_act)
+
+    return y.reshape(B, S, D), aux

@@ -1,0 +1,321 @@
+"""State-space sequence models: Mamba-1 (falcon-mamba) and Mamba-2/SSD (zamba2).
+
+These are the paper's object of study taken literally — the network *is* a
+discrete state-space system ``h[t] = Ā_t h[t-1] + B̄_t x_t``, ``y_t = C_t h_t``
+— and the implementation uses exactly the paper's j-step state-transition
+trick (§II-C): within a chunk of j steps the cumulative decay products
+(= diagonal Φ_{t,j}) are computed in parallel, and only one carry crosses
+chunk boundaries, shrinking the serial chain from T to T/j.
+
+Prefill paths are chunked (outer `lax.scan` over chunks, parallel math
+inside); decode paths are single-step state updates.  The Pallas
+``ssm_scan`` kernel implements the same chunked contract on TPU; this module
+is its jnp oracle and the dry-run path.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm, rmsnorm_params
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (k taps, "same" causal padding)
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """x: [B,T,C], w: [k,C], b: [C].  y[t] = Σ_i w[i]·x[t-k+1+i] + b."""
+    k = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    y = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(k))
+    return y + b
+
+
+def conv_step(conv_state, x_t, w, b):
+    """Single decode step.  conv_state: [B, k-1, C] (trailing inputs)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # [B,k,C]
+    y = jnp.einsum("bkc,kc->bc", window, w) + b
+    return window[:, 1:], y
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# ---------------------------------------------------------------------------
+
+def mamba1_params(key, cfg: ModelConfig) -> PyTree:
+    D, DI, N, R, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_actual, cfg.d_conv
+    ks = jax.random.split(key, 7)
+    dt = jnp.exp(
+        jax.random.uniform(ks[4], (DI,)) * (np.log(0.1) - np.log(0.001)) + np.log(0.001)
+    )
+    return {
+        # Split-aligned projections (§Perf): separate x/z matmuls instead of a
+        # fused in_proj — a post-matmul jnp.split on a TP-sharded dim crosses
+        # shard boundaries and lowers to collective-permutes (measured:
+        # ~69 GB/device/step on falcon prefill_32k).  Same math, zero comm.
+        "w_x": dense_init(ks[0], (D, DI), cfg.p_dtype),
+        "w_z": dense_init(ks[6], (D, DI), cfg.p_dtype),
+        "conv_w": (jax.random.normal(ks[1], (K, DI)) / np.sqrt(K)).astype(cfg.p_dtype),
+        "conv_b": jnp.zeros((DI,), cfg.p_dtype),
+        "x_proj": dense_init(ks[2], (DI, R + 2 * N), cfg.p_dtype),
+        "dt_proj": dense_init(ks[3], (R, DI), cfg.p_dtype),
+        # softplus(dt_bias) initializes Δ in [1e-3, 1e-1] (mamba init)
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(cfg.p_dtype),
+        "A_log": jnp.log(
+            jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (DI, N))
+        ).astype(cfg.p_dtype),
+        "D": jnp.ones((DI,), cfg.p_dtype),
+        "out_proj": dense_init(ks[5], (DI, D), cfg.p_dtype),
+    }
+
+
+def _mamba1_gather(p, cfg: ModelConfig, u):
+    """Shared projections: returns (x_conv, z, dt, B, C) for the scan."""
+    N, R = cfg.ssm_state, cfg.dt_rank_actual
+    x = u @ p["w_x"]
+    z = u @ p["w_z"]
+    x = jax.nn.silu(causal_conv1d(x, p["conv_w"], p["conv_b"]))
+    dbc = x @ p["x_proj"]
+    dt, B, C = dbc[..., :R], dbc[..., R : R + N], dbc[..., R + N :]
+    delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # [B,T,DI]
+    return x, z, delta, B, C
+
+
+def mamba1_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 256):
+    """Chunked selective scan (the j-step Φ form).  u: [B,T,D] → [B,T,D].
+
+    Outer scan over T/chunk chunks (serial, remat-friendly); inner exact
+    step-scan over the chunk (Δ is per-channel in Mamba-1, so the intra-chunk
+    low-rank factorization of SSD does not apply — the chunking still bounds
+    activation memory to O(chunk) and the carry to one [B,DI,N] state).
+    """
+    Bsz, T, _ = u.shape
+    DI, N = cfg.d_inner, cfg.ssm_state
+    if cfg.ssm_chunk:
+        chunk = cfg.ssm_chunk
+    x, z, delta, Bm, Cm = _mamba1_gather(p, cfg, u)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [DI,N]
+
+    if cfg.use_pallas:
+        from repro.kernels.ssm_scan import ops as ssm_ops
+
+        y, h = ssm_ops.ssm_scan(
+            x.astype(jnp.float32), delta.astype(jnp.float32), A,
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+        )
+        y = y + x * p["D"]
+        y = y * jax.nn.silu(z)
+        out = y.astype(u.dtype) @ p["out_proj"]
+        x_pre = u @ p["w_x"]
+        conv_tail = jnp.pad(x_pre, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))[:, -(cfg.d_conv - 1):]
+        return out, {"h": h, "conv": conv_tail}
+
+    c = min(chunk, T)
+    while T % c:
+        c //= 2
+    nc = T // c
+
+    def chunk_body(h, xs):
+        x_c, d_c, B_c, C_c = xs  # [c, B, ...] (time-major inside)
+
+        def step(h, s):
+            x_t, d_t, B_t, C_t = s
+            a = jnp.exp(d_t[..., None] * A)                      # [B,DI,N]
+            b = (d_t * x_t)[..., None] * B_t[:, None, :]          # [B,DI,N]
+            h = a * h + b
+            y = jnp.einsum("bdn,bn->bd", h, C_t)
+            return h, y
+
+        h, y_c = jax.lax.scan(step, h, (x_c, d_c, B_c, C_c))
+        return h, y_c
+
+    tm = lambda t: jnp.moveaxis(t, 1, 0).reshape((nc, c) + t.shape[:1] + t.shape[2:])
+    h = jnp.zeros((Bsz, DI, N), jnp.float32) if h0 is None else h0
+    body = jax.checkpoint(chunk_body) if cfg.remat else chunk_body
+    h, ys = jax.lax.scan(body, h, (tm(x), tm(delta), tm(Bm), tm(Cm)))
+    y = jnp.moveaxis(ys.reshape(T, Bsz, DI), 0, 1)
+
+    y = y + x * p["D"]
+    y = y * jax.nn.silu(z)
+    out = y.astype(u.dtype) @ p["out_proj"]
+    # Decode needs the trailing k-1 *pre-conv* inputs (XLA CSEs the re-proj).
+    x_pre = u @ p["w_x"]
+    conv_tail = jnp.pad(x_pre, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))[:, -(cfg.d_conv - 1):]
+    return out, {"h": h, "conv": conv_tail}
+
+
+def mamba1_decode(p, cfg: ModelConfig, u_t, state: PyTree):
+    """One token.  u_t: [B,1,D]; state = {"h": [B,DI,N], "conv": [B,k-1,DI]}."""
+    N, R, DI = cfg.ssm_state, cfg.dt_rank_actual, cfg.d_inner
+    x_pre = u_t[:, 0] @ p["w_x"]
+    z = u_t[:, 0] @ p["w_z"]
+    conv_state, x = conv_step(state["conv"], x_pre, p["conv_w"], p["conv_b"])
+    x = jax.nn.silu(x)
+    dbc = x @ p["x_proj"]
+    dt, Bm, Cm = dbc[..., :R], dbc[..., R : R + N], dbc[..., R + N :]
+    delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(delta[..., None] * A)
+    b = (delta * x)[..., None] * Bm[:, None, :]
+    h = a * state["h"] + b
+    y = jnp.einsum("bdn,bn->bd", h, Cm) + x * p["D"]
+    y = y * jax.nn.silu(z)
+    out = (y.astype(u_t.dtype) @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": conv_state}
+
+
+def mamba1_init_state(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 / SSD (zamba2): scalar-per-head decay -> matrix (MXU) form
+# ---------------------------------------------------------------------------
+
+def mamba2_params(key, cfg: ModelConfig) -> PyTree:
+    D, DI, N, K = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.d_conv
+    H = cfg.n_mamba_heads
+    ks = jax.random.split(key, 6)
+    # Split-aligned projections (§Perf): z / x / (B,C) / dt as separate
+    # matmuls, and the causal conv split into its channel-sharded x part and
+    # its tiny replicated (B,C) part — no post-matmul splits across TP shards.
+    return {
+        "w_z": dense_init(ks[0], (D, DI), cfg.p_dtype),
+        "w_x": dense_init(ks[4], (D, DI), cfg.p_dtype),
+        "w_bc": dense_init(ks[5], (D, 2 * N), cfg.p_dtype),
+        "w_dt": dense_init(ks[2], (D, H), cfg.p_dtype),
+        "conv_w_x": (jax.random.normal(ks[1], (K, DI)) / np.sqrt(K)).astype(cfg.p_dtype),
+        "conv_b_x": jnp.zeros((DI,), cfg.p_dtype),
+        "conv_w_bc": (jax.random.normal(ks[1], (K, 2 * N)) / np.sqrt(K)).astype(cfg.p_dtype),
+        "conv_b_bc": jnp.zeros((2 * N,), cfg.p_dtype),
+        "dt_bias": jnp.zeros((H,), cfg.p_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(cfg.p_dtype),
+        "D": jnp.ones((H,), cfg.p_dtype),
+        "norm": rmsnorm_params(DI, cfg.p_dtype),
+        "out_proj": dense_init(ks[3], (DI, D), cfg.p_dtype),
+    }
+
+
+def _ssd_chunk(x, dt, B, C, A, h0, chunk: int):
+    """SSD chunked scan.  x: [Bsz,T,H,P]; dt: [Bsz,T,H]; B,C: [Bsz,T,N].
+
+    Per head h, state S ∈ R^{P×N}:  S_t = a_t S_{t-1} + Δ_t x_t B_tᵀ,
+    y_t = S_t C_t.  a_t = exp(Δ_t A_h) is a *scalar* per head — the paper's
+    Φ products become scalars, so intra-chunk work factorizes into two
+    matmuls (MXU-friendly): pairwise decay ⊙ (C_t·B_s) Gram matrix.
+    """
+    Bsz, T, H, P = x.shape
+    N = B.shape[-1]
+    c = min(chunk, T)
+    while T % c:
+        c //= 2
+    nc = T // c
+
+    la = dt * A  # log decay [Bsz,T,H]
+    res = lambda t: t.reshape((Bsz, nc, c) + t.shape[2:])
+    x_c, la_c, dt_c, B_c, C_c = res(x), res(la), res(dt), res(B), res(C)
+
+    L = jnp.cumsum(la_c, axis=2)  # [Bsz,nc,c,H] within-chunk cumulative log Φ
+
+    # --- intra-chunk (parallel over chunks) ---
+    # decay[t,s] = exp(L_t - L_s) for s<=t (strictly: decay from s to t).
+    # Mask BEFORE the exp: the s>t half is ≥0 and can overflow to inf, and
+    # inf→0 masking after exp poisons the backward pass with NaNs.
+    diff = L[:, :, :, None, :] - L[:, :, None, :, :]          # [B,nc,c,c,H]
+    tri = jnp.tril(jnp.ones((c, c), bool))
+    G = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -1e30))
+    CB = jnp.einsum("bitk,bisk->bits", C_c, B_c)               # [B,nc,c,c]
+    W = G * CB[..., None]                                      # [B,nc,c,c,H]
+    y_intra = jnp.einsum("bitsh,bishp->bithp", W, x_c * dt_c[..., None])
+
+    # --- chunk summaries: S_i = Σ_s exp(L_end - L_s) Δ_s x_s B_sᵀ ---
+    decay_to_end = jnp.exp(L[:, :, -1:, :] - L)                # [B,nc,c,H]
+    S = jnp.einsum("bish,bishp,bisk->bihpk",
+                   decay_to_end, x_c * dt_c[..., None], B_c)   # [B,nc,H,P,N]
+
+    # --- inter-chunk serial carry (length nc — the j-step chain) ---
+    a_chunk = jnp.exp(L[:, :, -1, :])                          # [B,nc,H]
+
+    def carry(h, s):
+        a_i, S_i = s
+        h_new = a_i[..., None, None] * h + S_i
+        return h_new, h  # emit the *incoming* state of each chunk
+
+    h_last, h_in = jax.lax.scan(
+        carry, h0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(S, 1, 0))
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)                            # [B,nc,H,P,N]
+
+    # --- inter-chunk contribution: y_t += C_t · (exp(L_t) h_in) ---
+    y_inter = jnp.einsum("bitk,bith,bihpk->bithp", C_c, jnp.exp(L), h_in)
+
+    y = (y_intra + y_inter).reshape(Bsz, T, H, P)
+    return y, h_last
+
+
+def mamba2_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 128):
+    Bsz, T, _ = u.shape
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_mamba_heads, cfg.mamba_headdim
+    if cfg.ssm_chunk:
+        chunk = cfg.ssm_chunk
+    z = u @ p["w_z"]
+    x = jax.nn.silu(causal_conv1d(u @ p["w_x"], p["conv_w_x"], p["conv_b_x"]))
+    bc = jax.nn.silu(causal_conv1d(u @ p["w_bc"], p["conv_w_bc"], p["conv_b_bc"]))
+    B, C = jnp.split(bc, 2, axis=-1)
+    dt = jax.nn.softplus(u @ p["w_dt"] + p["dt_bias"])         # [B,T,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [H]
+    x_h = x.reshape(Bsz, T, H, P).astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    y, h_last = _ssd_chunk(x_h, dt.astype(jnp.float32), B.astype(jnp.float32),
+                           C.astype(jnp.float32), A, h0, chunk)
+    y = y + x_h * p["D"][:, None].astype(jnp.float32)
+    y = y.reshape(Bsz, T, DI).astype(u.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    pad_tail = lambda t: jnp.pad(t, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))[:, -(cfg.d_conv - 1):]
+    conv_tail = {"x": pad_tail(u @ p["w_x"]), "bc": pad_tail(u @ p["w_bc"])}
+    return y @ p["out_proj"], {"h": h_last, "conv": conv_tail}
+
+
+def mamba2_decode(p, cfg: ModelConfig, u_t, state: PyTree):
+    Bsz = u_t.shape[0]
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_mamba_heads, cfg.mamba_headdim
+    u0 = u_t[:, 0]
+    z = u0 @ p["w_z"]
+    conv_x, x = conv_step(state["conv"]["x"], u0 @ p["w_x"], p["conv_w_x"], p["conv_b_x"])
+    conv_bc, bc = conv_step(state["conv"]["bc"], u0 @ p["w_bc"], p["conv_w_bc"], p["conv_b_bc"])
+    conv_state = {"x": conv_x, "bc": conv_bc}
+    x = jax.nn.silu(x)
+    B, C = jnp.split(jax.nn.silu(bc), 2, axis=-1)
+    dt = jax.nn.softplus(u0 @ p["w_dt"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(dt * A)                                        # [B,H]
+    x_h = x.reshape(Bsz, H, P).astype(jnp.float32)
+    dBx = jnp.einsum("bh,bhp,bk->bhpk", dt.astype(jnp.float32), x_h, B.astype(jnp.float32))
+    h = a[..., None, None] * state["h"] + dBx
+    y = jnp.einsum("bhpk,bk->bhp", h, C.astype(jnp.float32))
+    y = y + x_h * p["D"][:, None]
+    y = y.reshape(Bsz, DI).astype(u_t.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], {"h": h, "conv": conv_state}
+
+
+def mamba2_init_state(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.n_mamba_heads, cfg.mamba_headdim, cfg.ssm_state), jnp.float32),
+        "conv": {
+            "x": jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), jnp.float32),
+            "bc": jnp.zeros((batch, cfg.d_conv - 1, 2 * cfg.ssm_state), jnp.float32),
+        },
+    }

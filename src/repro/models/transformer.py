@@ -1,0 +1,274 @@
+"""Block assembly: heterogeneous layer stacks as a uniform scan over groups.
+
+The paper's layer-wise resource sharing (§IV-A) is realized by scanning one
+compiled *group body* over stacked parameters.  A group is one period of the
+architecture's block pattern (``ModelConfig.layer_pattern``):
+
+    dense            -> ("attn",)
+    gemma3           -> ("attn_local",)*5 + ("attn",)         # 5:1 local:global
+    llama-vision     -> ("attn",)*4 + ("cross",)
+    moe              -> ("moe",)
+    falcon-mamba     -> ("mamba1",)
+    zamba2           -> ("mamba2",)*k + ("shared_attn",)       # shared weights!
+
+Zamba2's shared transformer block is the paper's resource sharing taken
+literally: ONE set of attention/MLP weights is closed over by the scan body
+(hoisted — gathered once, reused every group) while per-application LoRA
+deltas ride in the stacked group params.
+
+Decode caches are pytrees stacked over groups and threaded through the scan
+as (xs → ys): the state vector of the serving-time state-space system.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn_lib
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .config import ModelConfig
+from .layers import mlp_apply, mlp_params, rmsnorm, rmsnorm_params
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# per-block parameter construction
+# ---------------------------------------------------------------------------
+
+def _block_params(key, cfg: ModelConfig, kind: str) -> PyTree:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    if kind in ("attn", "attn_local"):
+        ap = attn_lib.mla_params(k1, cfg) if cfg.use_mla else attn_lib.gqa_params(k1, cfg)
+        return {
+            "ln_attn": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+            "attn": ap,
+            "ln_mlp": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+            "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.p_dtype),
+        }
+    if kind == "moe":
+        ap = attn_lib.mla_params(k1, cfg) if cfg.use_mla else attn_lib.gqa_params(k1, cfg)
+        return {
+            "ln_attn": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+            "attn": ap,
+            "ln_mlp": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+            "moe": moe_lib.moe_params(k2, cfg),
+        }
+    if kind == "cross":
+        return {
+            "ln_attn": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+            "cross": attn_lib.cross_attn_params(k1, cfg),
+            "ln_mlp": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+            "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.p_dtype),
+        }
+    if kind == "mamba1":
+        return {"ln": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+                "mamba": ssm_lib.mamba1_params(k1, cfg)}
+    if kind == "mamba2":
+        return {"ln": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+                "mamba": ssm_lib.mamba2_params(k1, cfg)}
+    if kind == "shared_attn":
+        # Only the per-application pieces live here; weights are shared.
+        return {
+            "ln_attn": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+            "lora": attn_lib.gqa_params(k1, cfg, lora_rank=cfg.shared_attn_lora_rank)["lora"],
+            "ln_mlp": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+        }
+    raise ValueError(kind)
+
+
+def group_params(key, cfg: ModelConfig) -> PyTree:
+    pat = cfg.layer_pattern
+    keys = jax.random.split(key, len(pat))
+    return {f"b{i}_{kind}": _block_params(keys[i], cfg, kind) for i, kind in enumerate(pat)}
+
+
+def shared_block_params(key, cfg: ModelConfig) -> PyTree | None:
+    """Zamba2's single shared transformer block (attention + MLP)."""
+    if "shared_attn" not in cfg.layer_pattern:
+        return None
+    k1, k2 = jax.random.split(key)
+    base = attn_lib.gqa_params(k1, cfg)
+    return {
+        "attn": base,
+        "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, cfg.gated_mlp, cfg.p_dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cache construction (decode state)
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int) -> PyTree | None:
+    dt = cfg.act_dtype
+    if kind in ("attn", "moe", "shared_attn"):
+        if cfg.use_mla and kind != "shared_attn":
+            return {
+                "c_kv": jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dt),
+                "k_rope": jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dt),
+            }
+        return {
+            "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+    if kind == "attn_local":
+        s = min(max_seq, cfg.sliding_window)
+        return {
+            "k": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
+            "v": jnp.zeros((batch, s, cfg.n_kv_heads, cfg.head_dim), dt),
+        }
+    if kind == "mamba1":
+        return ssm_lib.mamba1_init_state(cfg, batch)
+    if kind == "mamba2":
+        return ssm_lib.mamba2_init_state(cfg, batch)
+    if kind == "cross":
+        return jnp.zeros((1,), jnp.float32)  # vision memory is static; dummy state
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int) -> PyTree:
+    """Decode cache: {"groups": stacked-over-G, "tail": per-block} — the
+    serving state vector."""
+    pat = cfg.layer_pattern
+    one = {f"b{i}_{kind}": _block_cache(cfg, kind, batch, max_seq) for i, kind in enumerate(pat)}
+    G = cfg.n_groups
+    cache = {"groups": jax.tree.map(lambda leaf: jnp.broadcast_to(leaf, (G,) + leaf.shape).copy(), one)}
+    if cfg.tail_pattern:
+        cache["tail"] = {
+            f"t{i}_{kind}": _block_cache(cfg, kind, batch, max_seq)
+            for i, kind in enumerate(cfg.tail_pattern)
+        }
+    return cache
+
+
+def tail_params(key, cfg: ModelConfig) -> PyTree | None:
+    if not cfg.tail_pattern:
+        return None
+    keys = jax.random.split(key, len(cfg.tail_pattern))
+    return {
+        f"t{i}_{kind}": _block_params(keys[i], cfg, kind)
+        for i, kind in enumerate(cfg.tail_pattern)
+    }
+
+
+# ---------------------------------------------------------------------------
+# block application
+# ---------------------------------------------------------------------------
+
+def _local_window_cache_update(cache, k, v, pos):
+    """Ring-buffer write for sliding-window caches: slot = pos mod window."""
+    W = cache["k"].shape[1]
+    B = k.shape[0]
+    slot = jnp.mod(pos, W)
+    bidx = jnp.arange(B)
+    ck = cache["k"].at[bidx, slot].set(k[:, 0].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, slot].set(v[:, 0].astype(cache["v"].dtype))
+    return {"k": ck, "v": cv}
+
+
+def apply_block(
+    p_blk: PyTree,
+    shared: PyTree | None,
+    cfg: ModelConfig,
+    kind: str,
+    x: jnp.ndarray,
+    *,
+    memory=None,
+    cache=None,
+    pos=None,
+    mode: str = "train",
+):
+    """One block, all kinds, all modes.  Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    decode = mode == "decode"
+
+    if kind in ("attn", "attn_local", "moe"):
+        window = cfg.sliding_window if kind == "attn_local" else 0
+        acfg = cfg
+        if kind == "attn" and cfg.global_every and getattr(cfg, "rope_theta_global", 0):
+            acfg = dataclasses.replace(cfg, rope_theta=cfg.rope_theta_global)
+        h = rmsnorm(p_blk["ln_attn"], x, cfg.norm_eps)
+        if cfg.use_mla:
+            if decode:
+                a, cache = attn_lib.mla_decode(p_blk["attn"], acfg, h, cache, pos)
+            else:
+                a, kv = attn_lib.mla_prefill(p_blk["attn"], acfg, h)
+                cache = {"c_kv": kv[0], "k_rope": kv[1]} if mode == "prefill" else None
+        else:
+            if decode:
+                if kind == "attn_local":
+                    a, cache = _gqa_decode_local(p_blk["attn"], acfg, h, cache, pos)
+                else:
+                    a, cache = attn_lib.gqa_decode(p_blk["attn"], acfg, h, cache, pos)
+            else:
+                a, kv = attn_lib.gqa_prefill(p_blk["attn"], acfg, h, window=window)
+                cache = {"k": kv[0], "v": kv[1]} if mode == "prefill" else None
+        x = x + a
+        h = rmsnorm(p_blk["ln_mlp"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, aux = moe_lib.moe_apply(
+                p_blk["moe"], cfg, h, group_size=cfg.moe_group_size or 2048
+            )
+        else:
+            y = mlp_apply(p_blk["mlp"], h, cfg.mlp_act)
+        return x + y, cache, aux
+
+    if kind == "cross":
+        h = rmsnorm(p_blk["ln_attn"], x, cfg.norm_eps)
+        x = x + attn_lib.cross_attn(p_blk["cross"], cfg, h, memory)
+        h = rmsnorm(p_blk["ln_mlp"], x, cfg.norm_eps)
+        return x + mlp_apply(p_blk["mlp"], h, cfg.mlp_act), cache, aux
+
+    if kind in ("mamba1", "mamba2"):
+        fn_pre = ssm_lib.mamba1_prefill if kind == "mamba1" else ssm_lib.mamba2_prefill
+        fn_dec = ssm_lib.mamba1_decode if kind == "mamba1" else ssm_lib.mamba2_decode
+        h = rmsnorm(p_blk["ln"], x, cfg.norm_eps)
+        if decode:
+            y, cache = fn_dec(p_blk["mamba"], cfg, h, cache)
+        else:
+            y, st = fn_pre(p_blk["mamba"], cfg, h)
+            cache = st if mode == "prefill" else None
+        return x + y, cache, aux
+
+    if kind == "shared_attn":
+        # shared weights + this application's LoRA deltas
+        ap = dict(shared["attn"])
+        ap["lora"] = p_blk["lora"]
+        h = rmsnorm(p_blk["ln_attn"], x, cfg.norm_eps)
+        if decode:
+            a, cache = attn_lib.gqa_decode(ap, cfg, h, cache, pos)
+        else:
+            a, kv = attn_lib.gqa_prefill(ap, cfg, h)
+            cache = {"k": kv[0], "v": kv[1]} if mode == "prefill" else None
+        x = x + a
+        h = rmsnorm(p_blk["ln_mlp"], x, cfg.norm_eps)
+        return x + mlp_apply(shared["mlp"], h, cfg.mlp_act), cache, aux
+
+    raise ValueError(kind)
+
+
+def _gqa_decode_local(p, cfg: ModelConfig, x, cache, pos):
+    """Decode against a ring-buffer sliding-window cache.
+
+    Keys in the ring carry their absolute position ``kpos`` implicitly:
+    slot s holds position p where p ≡ s (mod W) and pos-W < p <= pos.
+    RoPE phases are computed from the absolute positions, so we rebuild
+    kpos = pos - ((pos - s) mod W) per slot.
+    """
+    B, S, _ = x.shape
+    q, k, v = attn_lib._project_qkv(p, cfg, x)
+    posv = jnp.broadcast_to(jnp.asarray(pos), (B,))
+    q = attn_lib.apply_rope(q, posv[:, None], cfg.rope_theta, cfg.partial_rotary)
+    k = attn_lib.apply_rope(k, posv[:, None], cfg.rope_theta, cfg.partial_rotary)
+    cache = _local_window_cache_update(cache, k, v, posv)
+    W = cache["k"].shape[1]
+    slots = jnp.arange(W)[None, :]
+    kpos = posv[:, None] - jnp.mod(posv[:, None] - slots, W)  # [B,W] absolute
+    mask = (kpos >= 0) & (kpos >= posv[:, None] - W + 1) & (kpos <= posv[:, None])
+    out = attn_lib._sdpa(q, cache["k"], cache["v"], mask[:, None, None, :], cfg.attn_logit_softcap)
+    return out.reshape(B, S, -1) @ p["wo"], cache

@@ -1,0 +1,21 @@
+from .adamw import (
+    AdamWConfig,
+    AdamWState,
+    accumulate_grads,
+    apply,
+    clip_by_global_norm,
+    global_norm,
+    init,
+    lr_schedule,
+)
+
+__all__ = [
+    "AdamWConfig",
+    "AdamWState",
+    "accumulate_grads",
+    "apply",
+    "clip_by_global_norm",
+    "global_norm",
+    "init",
+    "lr_schedule",
+]

@@ -1,0 +1,135 @@
+"""AdamW with mixed precision, global-norm clipping, schedules, and
+gradient accumulation — pure JAX, ZeRO-compatible (the optimizer state is a
+pytree mirroring the params; sharding rules in ``repro.parallel.sharding``
+shard it over the DP axes = ZeRO-1, and over DP+TP when params are FSDP).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray      # scalar int32
+    m: PyTree              # first moment (f32)
+    v: PyTree              # second moment (f32)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup → cosine decay to ``lr_min_ratio``·peak."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = (step - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    t = jnp.clip(t, 0.0, 1.0)
+    cos = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cfg.lr_peak * cos)
+
+
+def init(params: PyTree) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+    )
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gn
+
+
+def apply(
+    cfg: AdamWConfig,
+    grads: PyTree,
+    state: AdamWState,
+    params: PyTree,
+) -> tuple[PyTree, AdamWState, dict]:
+    """One AdamW update.  Params may be bf16; the update math is f32 and the
+    new params are cast back to the param dtype (mixed-precision master-less
+    scheme; for true master weights keep params f32)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if cfg.clip_norm > 0:
+        grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    else:
+        gn = global_norm(grads)
+
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+
+    new_m = jax.tree.map(lambda m, g: cfg.b1 * m + (1 - cfg.b1) * g, state.m, grads)
+    new_v = jax.tree.map(lambda v, g: cfg.b2 * v + (1 - cfg.b2) * g * g, state.v, grads)
+
+    def upd(p, m, v):
+        mhat = m / b1c
+        vhat = v / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, AdamWState(step, new_m, new_v), {"lr": lr, "grad_norm": gn}
+
+
+# ---------------------------------------------------------------------------
+# gradient accumulation (microbatching; the C-slow stream count in time)
+# ---------------------------------------------------------------------------
+
+def accumulate_grads(
+    loss_fn: Callable[[PyTree, PyTree], tuple[jnp.ndarray, dict]],
+    params: PyTree,
+    batch: PyTree,
+    num_microbatches: int,
+):
+    """Split the leading batch dim into microbatches, scan-accumulate grads.
+
+    Returns (mean_loss, mean_grads, last_metrics).  Uses lax.scan so the
+    compiled program holds ONE microbatch of activations at a time.
+    """
+    if num_microbatches <= 1:
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return loss, grads, metrics
+
+    def resplit(x):
+        b = x.shape[0]
+        return x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+
+    micro = jax.tree.map(resplit, batch)
+    zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        acc_loss, acc_g = carry
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+        acc_g = jax.tree.map(lambda a, g: a + g.astype(jnp.float32), acc_g, grads)
+        return (acc_loss + loss, acc_g), metrics
+
+    (tot_loss, tot_g), metrics = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
+    n = num_microbatches
+    return tot_loss / n, jax.tree.map(lambda g: g / n, tot_g), jax.tree.map(lambda x: x[-1], metrics)

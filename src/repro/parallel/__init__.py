@@ -1,0 +1,3 @@
+from . import compression, pipeline, sharding
+
+__all__ = ["compression", "pipeline", "sharding"]

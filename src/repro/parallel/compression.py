@@ -1,0 +1,78 @@
+"""Gradient compression: int8 all-reduce with error feedback (1-bit-Adam
+family).  The paper's fixed-point analysis (§III-C) applied to the
+*collective* datapath: gradients are quantized to 8-bit fixed point before
+crossing the interconnect, and the quantization residual is fed back into
+the next step so the bias stays bounded (the state-space view: the residual
+is a state variable of the compression loop).
+
+Wire format: int8 payload + one f32 scale per tensor ⇒ ~4× collective-bytes
+reduction on the DP all-reduce (the dominant collective for small-model DP
+cells in §Roofline).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+PyTree = Any
+
+
+def _compress_psum_leaf(g, err, axis_name: str):
+    """Inside shard_map/pmap: error-feedback int8 all-reduce of one tensor."""
+    g32 = g.astype(jnp.float32) + err
+    amax = jax.lax.pmax(jnp.max(jnp.abs(g32)), axis_name)
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    n = jax.lax.psum(1, axis_name)
+    mean = total.astype(jnp.float32) * scale / n
+    new_err = g32 - q.astype(jnp.float32) * scale   # local residual
+    return mean, new_err
+
+
+def compressed_psum(grads: PyTree, err: PyTree, axis_name: str):
+    """All leaves; returns (mean_grads, new_err).  Call under shard_map."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    out = [_compress_psum_leaf(g, e, axis_name) for g, e in zip(flat_g, flat_e)]
+    means = jax.tree.unflatten(treedef, [m for m, _ in out])
+    errs = jax.tree.unflatten(treedef, [e for _, e in out])
+    return means, errs
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def make_compressed_allreduce(mesh: Mesh, axis_name: str = "data"):
+    """Returns allreduce(local_grads, err) -> (mean, err) as a shard_map'd fn.
+
+    local_grads leaves are stacked per-device on the leading axis:
+    [n_dev, ...]; the result is the compressed mean, replicated.
+    Used by the DDP trainer path and the compression tests.
+    """
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis_name), P(axis_name)),
+        out_specs=(P(), P(axis_name)),
+    )
+    def allreduce(local_g, err):
+        # leading singleton per-device axis from shard_map
+        g = jax.tree.map(lambda x: x[0], local_g)
+        e = jax.tree.map(lambda x: x[0], err)
+        mean, new_e = compressed_psum(g, e, axis_name)
+        return mean, jax.tree.map(lambda x: x[None], new_e)
+
+    return allreduce
+
+
+def reference_psum_mean(local_grads: PyTree):
+    """Oracle: exact f32 mean over the stacked device axis."""
+    return jax.tree.map(lambda g: jnp.mean(g.astype(jnp.float32), axis=0), local_grads)

@@ -1,0 +1,12 @@
+from .trainer import SimulatedFailure, StragglerMonitor, Trainer, TrainerConfig
+from .server import DecodeServer, Request, splice_cache
+
+__all__ = [
+    "SimulatedFailure",
+    "StragglerMonitor",
+    "Trainer",
+    "TrainerConfig",
+    "DecodeServer",
+    "Request",
+    "splice_cache",
+]

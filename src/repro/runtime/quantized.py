@@ -1,0 +1,81 @@
+"""Weight-only int8 serving (the paper's fixed-point deployment stage,
+§III-C/§IV-E, applied to the LM zoo).
+
+The paper chooses a fixed-point word length offline and ships quantized
+weights to the FPGA.  The TPU serving equivalent is W8A16: per-output-channel
+symmetric int8 weights (the MXU's integer path / our ``int8_matmul`` kernel),
+bf16 activations.  ``quantize_lm_params``/``dequantize_lm_params`` round-trip
+any zoo model's pytree; the SNR of the logits vs the full-precision model is
+the same metric as the paper's Fig. 11, measured by tests and the serving
+example.
+
+Matmul-weight leaves (ndim ≥ 2, both dims ≥ 32) are quantized; norms/biases/
+small SSM tensors stay in their original dtype (they are <1 % of bytes and
+precision-critical — the paper's "mixed-precision" note).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import dequantize_int8, quantize_int8
+
+PyTree = Any
+
+_MIN_DIM = 32
+
+
+def _is_weight(leaf) -> bool:
+    return (
+        hasattr(leaf, "ndim") and leaf.ndim >= 2
+        and leaf.shape[-1] >= _MIN_DIM and leaf.shape[-2] >= _MIN_DIM
+        and jnp.issubdtype(leaf.dtype, jnp.floating)
+    )
+
+
+_EXEMPT = ("router",)  # routing logits flip top-k under quantization; keep f32
+
+
+def quantize_lm_params(params: PyTree) -> tuple[PyTree, dict]:
+    """→ (quantized pytree, stats).  Weight leaves become
+    {"q": int8, "scale": f32 per-out-channel, "dtype": original}."""
+    n_in = n_q = 0
+    bytes_in = bytes_q = 0
+
+    def one(path, leaf):
+        nonlocal n_in, n_q, bytes_in, bytes_q
+        n_in += 1
+        bytes_in += leaf.size * leaf.dtype.itemsize
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if not _is_weight(leaf) or any(e in name for e in _EXEMPT):
+            bytes_q += leaf.size * leaf.dtype.itemsize
+            return leaf
+        # per-output-channel scales: quantize along the contraction dim (-2)
+        q, scale = quantize_int8(leaf.astype(jnp.float32), axis=-2)
+        n_q += 1
+        bytes_q += q.size + scale.size * 4
+        return {"__int8__": q, "scale": scale, "dtype": str(leaf.dtype)}
+
+    qp = jax.tree_util.tree_map_with_path(one, params)
+    return qp, {"weights_quantized": n_q, "leaves": n_in,
+                "bytes_before": bytes_in, "bytes_after": bytes_q,
+                "compression": bytes_in / max(bytes_q, 1)}
+
+
+def _is_qleaf(x) -> bool:
+    return isinstance(x, dict) and "__int8__" in x
+
+
+def dequantize_lm_params(qparams: PyTree) -> PyTree:
+    """Reconstruct a dense pytree (W8A16: dequantize at load/use time)."""
+
+    def one(x):
+        if _is_qleaf(x):
+            w = dequantize_int8(x["__int8__"], x["scale"])
+            return w.astype(jnp.dtype(x["dtype"]))
+        return x
+
+    return jax.tree.map(one, qparams, is_leaf=lambda x: _is_qleaf(x) or not isinstance(x, dict))

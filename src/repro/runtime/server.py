@@ -1,0 +1,157 @@
+"""Batched decode server with slot-based continuous batching.
+
+The serving state-space system made operational: B cache *slots* are the
+state registers; each decode tick applies f once for all live slots
+(per-slot positions — the C-slow interleave of independent streams through
+one datapath).  Requests claim free slots, retire on EOS/max_tokens, and new
+requests are admitted between ticks without recompiling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def splice_cache(caches: PyTree, prefill_caches: PyTree, b: int, plen: int) -> PyTree:
+    """Insert a B=1 prefill cache into batch slot ``b`` of the server cache.
+
+    Handles: full-length KV ([G,1,L,..] → [G,B,S_max,..] left-aligned), MLA
+    latents, sliding-window ring buffers (last W positions placed at
+    slot = pos mod W), and SSM states ([G,1,..] → batch row b).
+    """
+
+    def one(path, dst, src):
+        name = "/".join(str(getattr(p, "key", p)) for p in path)
+        if src is None or (hasattr(src, "ndim") and src.ndim == 0):
+            return dst
+        if src.ndim >= 3 and dst.ndim == src.ndim and src.shape[2] != dst.shape[2] \
+                and name.split("/")[-1] in ("k", "v", "c_kv", "k_rope"):
+            # sequence-bearing cache: [G, 1, L, ...] -> [G, B, S_dst, ...]
+            L, S_dst = src.shape[2], dst.shape[2]
+            if L <= S_dst:
+                return dst.at[:, b, :L].set(src[:, 0].astype(dst.dtype))
+            # ring buffer (sliding window): keep last S_dst, map p -> p mod W
+            W = S_dst
+            tail = src[:, 0, L - W:]                     # positions L-W .. L-1
+            pos = np.arange(L - W, L)
+            slots = pos % W
+            return dst.at[:, b, slots].set(tail.astype(dst.dtype))
+        if src.ndim == dst.ndim and src.shape[1] == 1:
+            # batch-row state (SSM h/conv, equal-length KV)
+            if src.shape[2:] == dst.shape[2:]:
+                return dst.at[:, b].set(src[:, 0].astype(dst.dtype))
+        return dst
+
+    return jax.tree_util.tree_map_with_path(one, caches, prefill_caches)
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0   # 0 = greedy
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    submitted_at: float = 0.0
+    first_token_at: float | None = None
+    done_at: float | None = None
+
+
+class DecodeServer:
+    def __init__(self, cfg: ModelConfig, params: PyTree, num_slots: int, max_seq: int,
+                 eos_id: int | None = None, seed: int = 0):
+        self.cfg, self.params = cfg, params
+        self.B, self.S = num_slots, max_seq
+        self.eos_id = eos_id
+        self.caches = lm.init_cache(cfg, num_slots, max_seq)
+        self.pos = np.zeros(num_slots, np.int32)        # next write position
+        self.live = np.zeros(num_slots, bool)
+        self.slot_req: list[Request | None] = [None] * num_slots
+        self.cur_tokens = np.zeros(num_slots, np.int32)
+        self.queue: deque[Request] = deque()
+        self.completed: list[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c, pos: lm.decode_step(p, cfg, t, c, pos)
+        )
+        self._prefill = jax.jit(lambda p, t: lm.prefill(p, cfg, t))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.submitted_at = time.perf_counter()
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """Fill free slots: run a B=1 prefill for the prompt and SPLICE the
+        resulting caches/states into the slot — the production
+        continuous-batching pattern (separate prefill program, shared decode
+        program; other slots' recurrent states are untouched)."""
+        for b in range(self.B):
+            if self.live[b] or not self.queue:
+                continue
+            req = self.queue.popleft()
+            toks = jnp.asarray(np.array(req.prompt, np.int32)[None])
+            logits, pc = self._prefill(self.params, toks)
+            self.caches = splice_cache(self.caches, pc, b, len(req.prompt))
+            first = int(np.argmax(np.asarray(logits[0])))
+            now = time.perf_counter()
+            req.out_tokens.append(first)
+            req.first_token_at = now
+            self.slot_req[b] = req
+            self.live[b] = True
+            self.pos[b] = len(req.prompt)
+            self.cur_tokens[b] = first
+
+    def step(self) -> int:
+        """One batched decode tick for all live slots.  Returns #live."""
+        self._admit()
+        if not self.live.any():
+            return 0
+        toks = jnp.asarray(self.cur_tokens[:, None])
+        logits, self.caches = self._decode(
+            self.params, toks, self.caches, jnp.asarray(self.pos)
+        )
+        logits = np.asarray(logits)
+        self.pos += self.live.astype(np.int32)
+        now = time.perf_counter()
+        for b in range(self.B):
+            if not self.live[b]:
+                continue
+            req = self.slot_req[b]
+            if req.temperature > 0:
+                self.key, sub = jax.random.split(self.key)
+                nxt = int(jax.random.categorical(sub, jnp.asarray(logits[b]) / req.temperature))
+            else:
+                nxt = int(np.argmax(logits[b]))
+            req.out_tokens.append(nxt)
+            if req.first_token_at is None:
+                req.first_token_at = now
+            self.cur_tokens[b] = nxt
+            full = len(req.out_tokens) >= req.max_new_tokens
+            hit_eos = self.eos_id is not None and nxt == self.eos_id
+            oom = self.pos[b] >= self.S - 1
+            if full or hit_eos or oom:
+                req.done_at = now
+                self.completed.append(req)
+                self.live[b] = False
+                self.slot_req[b] = None
+        return int(self.live.sum())
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> list[Request]:
+        ticks = 0
+        while (self.queue or self.live.any()) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return self.completed

@@ -1,0 +1,199 @@
+"""Training runtime: the control path (the paper's FSM state controller).
+
+Responsibilities:
+  * jitted train step (loss → grads → AdamW) over a mesh with the sharding
+    plan from ``repro.parallel.sharding``;
+  * checkpoint/restart: atomic async checkpoints every N steps, auto-resume
+    from the latest valid one — bitwise-deterministic continuation is
+    covered by tests (same data pipeline step counter, same PRNG);
+  * failure injection: ``fail_at_step`` raises mid-run to exercise the
+    restart path;
+  * straggler monitoring: per-step wall-times feed an EMA; steps slower
+    than ``straggler_factor``× the median trigger work reassignment in the
+    data pipeline (simulated-host model on CPU) and are logged;
+  * elastic restarts: checkpoints are mesh-agnostic; ``Trainer`` re-shards
+    on restore if the mesh changed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro import optim
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import lm
+from repro.models.config import ModelConfig
+from repro.parallel import sharding as shd
+
+PyTree = Any
+
+
+class SimulatedFailure(RuntimeError):
+    """Raised by failure injection to exercise checkpoint/restart."""
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_async: bool = True
+    keep_ckpts: int = 3
+    log_every: int = 10
+    microbatches: int = 1
+    fail_at_step: int | None = None       # failure injection
+    straggler_factor: float = 3.0
+    straggler_patience: int = 3
+    seed: int = 0
+
+
+class StragglerMonitor:
+    """Flags hosts whose step times exceed factor× the running median.
+
+    On real pods each host reports its step time through the coordination
+    service; here the trainer feeds (host, seconds) samples.  After
+    ``patience`` consecutive slow steps a host's data work is reassigned
+    (and the event is logged for the operator)."""
+
+    def __init__(self, factor: float, patience: int):
+        self.factor = factor
+        self.patience = patience
+        self.history: dict[int, list[float]] = {}
+        self.slow_counts: dict[int, int] = {}
+        self.reassigned: set[int] = set()
+        self.events: list[dict] = []
+
+    def observe(self, host: int, seconds: float, step: int) -> bool:
+        """Returns True if ``host`` was just declared a straggler."""
+        self.history.setdefault(host, []).append(seconds)
+        all_times = [t for ts in self.history.values() for t in ts[-20:]]
+        med = float(np.median(all_times))
+        if seconds > self.factor * med and len(all_times) >= 5:
+            self.slow_counts[host] = self.slow_counts.get(host, 0) + 1
+        else:
+            self.slow_counts[host] = 0
+        if self.slow_counts.get(host, 0) >= self.patience and host not in self.reassigned:
+            self.reassigned.add(host)
+            self.events.append({"step": step, "host": host, "median": med, "t": seconds})
+            return True
+        return False
+
+
+class Trainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        tcfg: TrainerConfig,
+        ocfg: optim.AdamWConfig,
+        dcfg: DataConfig,
+        mesh: Mesh | None = None,
+    ):
+        self.cfg, self.tcfg, self.ocfg = cfg, tcfg, ocfg
+        self.mesh = mesh or Mesh(np.array(jax.devices()).reshape(1, 1, -1), ("pod", "data", "model"))
+        self.data = TokenPipeline(dcfg)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+        self.monitor = StragglerMonitor(tcfg.straggler_factor, tcfg.straggler_patience)
+        self.metrics_log: list[dict] = []
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        cfg, mesh = self.cfg, self.mesh
+        params = lm.init_params(cfg, jax.random.PRNGKey(self.tcfg.seed))
+        opt_state = optim.init(params)
+        pspecs = shd.param_specs(cfg, params, mesh)
+        oshard = lambda t: jax.tree.map(lambda s: NamedSharding(mesh, s), t)
+        self.param_sh = oshard(pspecs)
+        self.opt_sh = optim.AdamWState(
+            step=NamedSharding(mesh, P()),
+            m=oshard(pspecs),
+            v=oshard(pspecs),
+        )
+        self.params = jax.device_put(params, self.param_sh)
+        self.opt_state = jax.tree.map(
+            lambda x, s: jax.device_put(x, s), opt_state, self.opt_sh,
+            is_leaf=lambda x: isinstance(x, jnp.ndarray),
+        )
+
+        ocfg, tcfg = self.ocfg, self.tcfg
+
+        def train_step(params, opt_state, batch):
+            loss_fn = lambda p, b: lm.train_loss(p, cfg, b)
+            loss, grads, metrics = optim.accumulate_grads(
+                loss_fn, params, batch, tcfg.microbatches
+            )
+            new_params, new_opt, om = optim.apply(ocfg, grads, opt_state, params)
+            return new_params, new_opt, {"loss": loss, **metrics, **om}
+
+        dp = shd.dp_axes(mesh)
+        bspec = NamedSharding(mesh, P(dp))
+        self._step_fn = jax.jit(
+            train_step,
+            in_shardings=(self.param_sh, self.opt_sh, {"tokens": bspec, "labels": bspec}),
+            donate_argnums=(0, 1),
+        )
+
+    # ------------------------------------------------------------------
+    def _resume(self) -> int:
+        last = self.ckpt.latest_step()
+        if last is None:
+            return 0
+        tree = {"params": self.params, "opt": self.opt_state}
+        restored, meta = self.ckpt.restore(tree, last)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        return int(meta["step"])
+
+    def run(self, resume: bool = True) -> dict:
+        start = self._resume() if resume else 0
+        tcfg = self.tcfg
+        losses = []
+        for step in range(start, tcfg.total_steps):
+            if tcfg.fail_at_step is not None and step == tcfg.fail_at_step:
+                raise SimulatedFailure(f"injected failure at step {step}")
+            t0 = time.perf_counter()
+            batch = self.data.global_batch_at(step)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            self.params, self.opt_state, metrics = self._step_fn(
+                self.params, self.opt_state, batch
+            )
+            loss = float(metrics["loss"])
+            dt = time.perf_counter() - t0
+            losses.append(loss)
+            if self.monitor.observe(host=0, seconds=dt, step=step):
+                # single-process simulation: host 0 can only reassign to itself
+                self.data.reassign(0, 0)
+            if step % tcfg.log_every == 0 or step == tcfg.total_steps - 1:
+                rec = {"step": step, "loss": loss, "sec": dt,
+                       "lr": float(metrics["lr"]), "grad_norm": float(metrics["grad_norm"])}
+                self.metrics_log.append(rec)
+            if (step + 1) % tcfg.ckpt_every == 0 or step == tcfg.total_steps - 1:
+                tree = {"params": self.params, "opt": self.opt_state}
+                if tcfg.ckpt_async:
+                    self.ckpt.save_async(step + 1, tree, {"step": step + 1})
+                else:
+                    self.ckpt.save(step + 1, tree, {"step": step + 1})
+        self.ckpt.wait()
+        return {
+            "final_loss": losses[-1] if losses else None,
+            "losses": losses,
+            "entropy_floor": self.data.entropy_floor,
+            "straggler_events": self.monitor.events,
+            "metrics": self.metrics_log,
+        }
+
+    def dump_metrics(self, path: str) -> None:
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            for rec in self.metrics_log:
+                f.write(json.dumps(rec) + "\n")

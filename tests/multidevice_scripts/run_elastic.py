@@ -1,0 +1,43 @@
+"""Subprocess: elastic restart — checkpoint saved under one mesh restores
+onto a different topology (mesh-agnostic layout)."""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.checkpoint import CheckpointManager
+
+devs = np.array(jax.devices())
+mesh_a = Mesh(devs.reshape(2, 4), ("data", "model"))
+mesh_b = Mesh(devs.reshape(4, 2), ("data", "model"))
+
+tree = {
+    "w": jax.device_put(
+        jax.random.normal(jax.random.PRNGKey(0), (16, 8)),
+        NamedSharding(mesh_a, P("data", "model")),
+    ),
+    "b": jax.device_put(jnp.arange(8.0), NamedSharding(mesh_a, P("model"))),
+}
+
+d = tempfile.mkdtemp()
+mgr = CheckpointManager(d)
+mgr.save(1, tree)
+
+template = {
+    "w": jax.ShapeDtypeStruct((16, 8), jnp.float32,
+                              sharding=NamedSharding(mesh_b, P("data", "model"))),
+    "b": jax.ShapeDtypeStruct((8,), jnp.float32,
+                              sharding=NamedSharding(mesh_b, P("model"))),
+}
+restored, _ = mgr.restore(template)
+np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+np.testing.assert_array_equal(np.asarray(restored["b"]), np.asarray(tree["b"]))
+assert restored["w"].sharding.mesh.shape["data"] == 4
+print("ELASTIC_OK")

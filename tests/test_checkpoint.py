@@ -1,0 +1,82 @@
+"""Checkpoint manager: atomicity, async, pruning, restore, corruption."""
+
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+@pytest.fixture
+def tree(key):
+    k1, k2 = jax.random.split(key)
+    return {
+        "params": {"w": jax.random.normal(k1, (8, 4)), "b": jnp.zeros(4)},
+        "opt": {"m": jax.random.normal(k2, (8, 4)), "step": jnp.int32(7)},
+    }
+
+
+def _assert_tree_equal(a, b):
+    jax.tree.map(lambda x, y: np.testing.assert_array_equal(np.asarray(x), np.asarray(y)), a, b)
+
+
+def test_roundtrip(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    mgr.save(10, tree, {"note": "x"})
+    restored, meta = mgr.restore(tree)
+    _assert_tree_equal(restored, tree)
+    assert meta["step"] == 10 and meta["note"] == "x"
+
+
+def test_async_save(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    fut = mgr.save_async(3, tree)
+    fut.result(timeout=30)
+    restored, meta = mgr.restore(tree)
+    _assert_tree_equal(restored, tree)
+
+
+def test_prune_keeps_newest(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.latest_step() == 4
+    assert sorted(int(d[5:]) for d in os.listdir(tmp_path) if d.startswith("step_")) == [3, 4]
+
+
+def test_crash_mid_save_preserves_last_valid(tmp_path, tree):
+    """A leftover tmp dir (simulated crash) must not corrupt restore."""
+    mgr = CheckpointManager(str(tmp_path), keep=3)
+    mgr.save(1, tree)
+    # simulate a crash: partial tmp dir, no manifest update
+    os.makedirs(tmp_path / "tmp.2")
+    with open(tmp_path / "tmp.2" / "arrays.npz", "w") as f:
+        f.write("garbage")
+    assert mgr.latest_step() == 1
+    restored, meta = mgr.restore(tree)
+    _assert_tree_equal(restored, tree)
+
+
+def test_restore_missing_leaf_raises(tmp_path, tree):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    bigger = dict(tree)
+    bigger["extra"] = jnp.zeros(3)
+    with pytest.raises(KeyError):
+        mgr.restore(bigger)
+
+
+def test_restore_casts_dtype(tmp_path, tree):
+    """Restore onto a bf16 template re-casts (mixed-precision resume)."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, tree)
+    template = jax.tree.map(
+        lambda x: x.astype(jnp.bfloat16) if x.dtype == jnp.float32 else x, tree
+    )
+    restored, _ = mgr.restore(template)
+    assert restored["params"]["w"].dtype == jnp.bfloat16

@@ -1,0 +1,97 @@
+"""MoE routing/dispatch invariants (hypothesis) + dense-equivalence oracle."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.models import moe as moe_lib
+from repro.models.layers import mlp_apply
+
+
+def _cfg(**kw):
+    base = get_smoke_config("olmoe-1b-7b")
+    return dataclasses.replace(base, **kw)
+
+
+def test_router_weights_normalized(key):
+    cfg = _cfg()
+    p = moe_lib.moe_params(key, cfg)
+    x = jax.random.normal(key, (4, 8, cfg.d_model))
+    top_e, top_w, aux = moe_lib.route(p, cfg, x)
+    assert top_e.shape == (4, 8, cfg.top_k)
+    np.testing.assert_allclose(jnp.sum(top_w, -1), 1.0, atol=1e-5)
+    assert float(aux) >= 1.0 - 1e-5  # Switch aux loss lower bound at balance
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), cf=st.sampled_from([0.5, 1.0, 2.0]))
+def test_capacity_never_exceeded(seed, cf):
+    """No expert receives more than C tokens; slots are unique."""
+    cfg = _cfg(capacity_factor=cf)
+    kp, kx = jax.random.split(jax.random.PRNGKey(seed))
+    p = moe_lib.moe_params(kp, cfg)
+    x = jax.random.normal(kx, (2, 32, cfg.d_model))
+    B, S, D = x.shape
+    g = B * S
+    xt = x.reshape(1, g, D)
+    top_e, top_w, _ = moe_lib.route(p, cfg, xt)
+    E, k = cfg.n_experts, cfg.top_k
+    C = moe_lib._capacity(g, cfg)
+
+    e_onehot = jax.nn.one_hot(top_e, E, dtype=jnp.int32)
+    flat = e_onehot.reshape(1, g * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat
+    slot = jnp.sum(pos * flat, axis=-1).reshape(1, g, k)
+    keep = slot < C
+    # per-expert kept count ≤ C
+    kept_per_e = jnp.sum(e_onehot * keep[..., None].astype(jnp.int32), axis=(1, 2))
+    assert int(jnp.max(kept_per_e)) <= C
+
+
+def test_moe_matches_dense_oracle_when_capacity_ample(key):
+    """With no dropping, the dispatch/combine einsums must equal the naive
+    per-token weighted sum of expert MLPs."""
+    cfg = _cfg(capacity_factor=64.0)
+    p = moe_lib.moe_params(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(5), (2, 8, cfg.d_model)) * 0.5
+    y, aux = moe_lib.moe_apply(p, cfg, x)
+
+    top_e, top_w, _ = moe_lib.route(p, cfg, x)
+    ref = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        pe = {"w_in": p["w_in"][e], "w_gate": p["w_gate"][e], "w_out": p["w_out"][e]}
+        ye = mlp_apply(pe, x, act=cfg.mlp_act)
+        wsel = jnp.sum(jnp.where(top_e == e, top_w, 0.0), axis=-1)
+        ref = ref + wsel[..., None] * ye
+    np.testing.assert_allclose(y, ref, atol=2e-5, rtol=1e-4)
+
+
+def test_shared_experts_always_active(key):
+    """deepseek-style shared experts contribute to every token."""
+    cfg = get_smoke_config("deepseek-v2-lite-16b")
+    cfg = dataclasses.replace(cfg, capacity_factor=0.0)  # drop ALL routed tokens
+    p = moe_lib.moe_params(key, cfg)
+    x = jax.random.normal(key, (1, 4, cfg.d_model))
+    y, _ = moe_lib.moe_apply(p, cfg, x)
+    shared_only = mlp_apply(p["shared"], x.reshape(1, 4, cfg.d_model), act=cfg.mlp_act)
+    # capacity>=top_k floor keeps a few slots; just assert shared path present
+    assert float(jnp.linalg.norm(y)) > 0
+    assert float(jnp.linalg.norm(shared_only)) > 0
+
+
+def test_dropping_monotone_in_capacity(key):
+    """Lower capacity ⇒ output moves further from the no-drop reference."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (2, 32, 64)) * 0.5
+    outs = {}
+    for cf in (0.25, 1.0, 64.0):
+        cfg = _cfg(capacity_factor=cf)
+        p = moe_lib.moe_params(jax.random.PRNGKey(0), cfg)
+        outs[cf], _ = moe_lib.moe_apply(p, cfg, x)
+    d_low = float(jnp.linalg.norm(outs[0.25] - outs[64.0]))
+    d_mid = float(jnp.linalg.norm(outs[1.0] - outs[64.0]))
+    assert d_low > d_mid

@@ -1,0 +1,50 @@
+"""Multi-device behaviours, each in a subprocess with fake XLA devices
+(the main test process keeps the single real CPU device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+SCRIPTS = os.path.join(os.path.dirname(__file__), "multidevice_scripts")
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(script: str, token: str, timeout: int = 560):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, os.path.join(SCRIPTS, script)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert proc.returncode == 0, f"{script} failed:\n{proc.stdout}\n{proc.stderr}"
+    assert token in proc.stdout
+
+
+@pytest.mark.slow
+def test_pipeline_parallelism_subprocess():
+    _run("run_pipeline.py", "PIPELINE_OK")
+
+
+@pytest.mark.slow
+def test_gradient_compression_subprocess():
+    _run("run_compression.py", "COMPRESSION_OK")
+
+
+@pytest.mark.slow
+def test_mini_dryrun_subprocess():
+    _run("run_minidryrun.py", "MINIDRYRUN_OK")
+
+
+@pytest.mark.slow
+def test_elastic_restore_subprocess():
+    _run("run_elastic.py", "ELASTIC_OK")
+
+
+@pytest.mark.slow
+def test_ep_moe_subprocess():
+    """Explicit all-to-all expert parallelism == einsum dispatch, and the
+    compiled schedule contains exactly two all-to-alls per layer."""
+    _run("run_ep_moe.py", "EP_MOE_OK")

@@ -1,0 +1,123 @@
+"""Reproduction of the paper's own case study and claims.
+
+Fig. 7  — 3-in / 4×4 hidden / 2-out tanh MLP in state-space form (eq. 8)
+Fig. 10 — generator scalability: 8-in/8-out, 14- and 31-layer × 32-node nets
+Fig. 11 — output SNR vs fixed-point word length
+Table I — generator API functions
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_mlp import CASE_STUDY, FIG10_A, FIG10_B
+from repro.core.quantization import (
+    FixedPointFormat,
+    default_format,
+    fixed_mlp_forward,
+    float_mlp_forward,
+    output_snr_db,
+)
+from repro.core.synthesis import (
+    NetworkSpec,
+    create_af,
+    create_af_end,
+    create_layer,
+    create_layer1,
+    create_layer_end,
+    create_mult,
+    create_top_module,
+    synthesize,
+)
+
+
+def test_case_study_dimensions():
+    assert (CASE_STUDY.num_inputs, CASE_STUDY.num_hidden_layers,
+            CASE_STUDY.nodes_per_layer, CASE_STUDY.num_outputs) == (3, 4, 4, 2)
+    params, forward = create_top_module(CASE_STUDY)
+    y = forward(params, jnp.asarray([0.1, -0.2, 0.3]))
+    assert y.shape == (2,)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_iterative_equals_direct_nn_equations(key):
+    """Paper §IV-C: 'Both direct and iterative equations … are simulated and
+    the result is checked to ensure the correctness'."""
+    params, forward = create_top_module(CASE_STUDY)
+    u = jax.random.normal(key, (CASE_STUDY.num_inputs,))
+    y_iter = forward(params, u)
+    # direct: unrolled python loop
+    x = params["beta"] @ u
+    for i in range(CASE_STUDY.num_hidden_layers):
+        x = jnp.tanh(params["W"][i] @ x + params["b"][i])
+    y_direct = params["C"] @ x
+    np.testing.assert_allclose(y_iter, y_direct, atol=1e-6)
+
+
+def test_fig11_snr_curve(rng):
+    """Negative SNR at 8 bits (conservative shared format), monotone rise,
+    ≥40 dB in the paper's 'acceptable' 20–24 bit band, f64-saturation at 64."""
+    params, _ = create_top_module(CASE_STUDY)
+    W = np.asarray(params["W"], np.float64)
+    b = np.asarray(params["b"], np.float64)
+    beta = np.asarray(params["beta"], np.float64)
+    C = np.asarray(params["C"], np.float64)
+    U = rng.uniform(-1, 1, size=(256, 3))
+    y_ref = float_mlp_forward(W, b, beta, C, U)
+
+    def snr_at(fmt):
+        y = fixed_mlp_forward(W, b, beta, C, U, fmt)
+        return float(np.mean(output_snr_db(y_ref, y)))
+
+    # RTL-style shared format with accumulator headroom: 8 int bits leave 0
+    # fractional bits — the output collapses to the grid (SNR ≤ 0 dB,
+    # 'unacceptable' in the paper's words; exact 0.0 = output rounds to 0).
+    snr8 = snr_at(FixedPointFormat(8, 0))
+    assert snr8 <= 0.0
+    curve = {w: snr_at(default_format(w)) for w in (12, 16, 20, 24, 32, 48, 64)}
+    assert curve[12] < curve[16] < curve[20] < curve[24] < curve[32]
+    assert curve[24] > 40.0
+    assert abs(curve[64] - curve[48]) < 6.0
+
+
+@pytest.mark.parametrize("spec,expect_layers", [(FIG10_A, 14), (FIG10_B, 31)])
+def test_fig10_generator_scales(spec, expect_layers):
+    """The generator emits nets of arbitrary depth (Fig. 10's 14/31-layer)."""
+    rep = synthesize(spec, batch=4)
+    assert rep.spec.num_hidden_layers == expect_layers
+    expected_params = (
+        spec.nodes_per_layer * spec.num_inputs
+        + expect_layers * (spec.nodes_per_layer ** 2 + spec.nodes_per_layer)
+        + spec.num_outputs * spec.nodes_per_layer
+    )
+    assert rep.num_params == expected_params
+    assert rep.flops and rep.flops > 0
+    assert rep.output_shape == (4, spec.num_outputs)
+
+
+def test_table1_api_shapes(key):
+    """Each Table-I constructor exists with faithful semantics."""
+    beta = create_layer1(3, 4, key)                      # Create_Layer1
+    assert beta.shape == (4, 3)
+    W, b = create_layer(4, 5, key)                       # Create_Layer
+    assert W.shape == (5, 4, 4) and b.shape == (5, 4)
+    C = create_layer_end(4, 2, key)                      # Create_Layer_End
+    assert C.shape == (2, 4)
+    af = create_af("tanh")                               # Create_AF
+    np.testing.assert_allclose(af(jnp.zeros(3)), 0.0)
+    af_end = create_af_end("identity")                   # Create_AF_End
+    np.testing.assert_allclose(af_end(jnp.asarray([1.5])), 1.5)
+    macc = create_mult()                                 # Create_mult
+    y = macc(jnp.ones(4), jnp.ones((2, 4)), jnp.zeros(2))
+    np.testing.assert_allclose(y, [4.0, 4.0])
+
+
+def test_resource_speed_knob_semantics_free(key):
+    """The clk/resource compromise (unroll) never changes results."""
+    s1 = NetworkSpec(3, 8, 4, 2, unroll=1)
+    s2 = NetworkSpec(3, 8, 4, 2, unroll=4)
+    p1, f1 = create_top_module(s1)
+    p2, f2 = create_top_module(s2)
+    u = jax.random.normal(key, (3,))
+    np.testing.assert_allclose(f1(p1, u), f2(p2, u), atol=1e-6)

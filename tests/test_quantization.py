@@ -1,0 +1,113 @@
+"""Fixed-point analysis subsystem tests (paper §III-C / §IV-E / Fig. 11)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    FixedPointFormat,
+    default_format,
+    fixed_mlp_forward,
+    float_mlp_forward,
+    linear_noise_gain,
+    make_tanh_lut,
+    output_snr_db,
+    quantize_int8,
+    dequantize_int8,
+    snr_sweep,
+    tanh_lut_apply,
+)
+
+
+def _net(rng, n=4, m=4, l=3, p=2):
+    W = rng.normal(size=(n, m, m)) / np.sqrt(m)
+    b = 0.1 * rng.normal(size=(n, m))
+    beta = rng.normal(size=(m, l))
+    C = rng.normal(size=(p, m))
+    return W, b, beta, C
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.integers(6, 29), seed=st.integers(0, 2**30))
+def test_quantize_roundtrip_error_bound(bits, seed):
+    """|x - Q(x)| ≤ step/2 within range — the quantization noise model."""
+    rng = np.random.default_rng(seed)
+    fmt = default_format(bits)
+    x = rng.uniform(-4, 4, size=128)
+    err = np.abs(fmt.quantize_real(x) - x)
+    assert err.max() <= 0.5 / fmt.scale + 1e-12
+
+
+def test_snr_monotone_and_saturating(rng):
+    """Fig. 11: SNR rises with word length and saturates at float64."""
+    W, b, beta, C = _net(rng)
+    rows = snr_sweep(W, b, beta, C, [8, 12, 16, 24, 32, 48, 64], num_inputs=128)
+    snr = {w: float(np.mean(s)) for w, s in rows}
+    assert snr[8] < snr[12] < snr[16] < snr[24] < snr[32]
+    assert snr[24] > 40.0  # paper: 20-24 bits acceptable for most applications
+    # saturation: 48 -> 64 gains almost nothing (double-precision limit)
+    assert abs(snr[64] - snr[48]) < 6.0
+
+
+def test_conservative_headroom_is_negative_at_8_bits(rng):
+    """With RTL-style shared-format accumulator headroom (8 integer bits),
+    8-bit words leave 0 fractional bits -> negative SNR, as in Fig. 11."""
+    W, b, beta, C = _net(rng)
+    U = rng.uniform(-1, 1, size=(128, 3))
+    y_ref = float_mlp_forward(W, b, beta, C, U)
+    fmt = FixedPointFormat(total_bits=8, frac_bits=0)
+    y = fixed_mlp_forward(W, b, beta, C, U, fmt)
+    assert float(np.mean(output_snr_db(y_ref, y))) <= 0.0
+
+
+def test_tanh_lut_error_shrinks_with_addr_bits():
+    fmt = FixedPointFormat(24, 20)
+    x = np.linspace(-3.9, 3.9, 1001)
+    errs = []
+    for a in (6, 10, 14):
+        lut = make_tanh_lut(a, fmt)
+        errs.append(np.abs(tanh_lut_apply(x, lut) - np.tanh(x)).max())
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-4
+
+
+def test_linear_noise_gain_matches_monte_carlo(rng):
+    """State-space quantization-noise propagation: analytic Σ‖CΦ‖² gain
+    matches Monte-Carlo injection (paper §III-C's 'systematic analysis')."""
+    n, m, p = 6, 4, 2
+    A = rng.normal(size=(n, m, m)) * 0.4
+    C = rng.normal(size=(p, m))
+    gain = linear_noise_gain(A, C)
+
+    sigma = 1e-3
+    trials = 4000
+    out_clean = np.zeros(p)
+    x = np.ones(m)
+    for k in range(n):
+        x = A[k] @ x
+    out_clean = C @ x
+
+    acc = 0.0
+    for t in range(trials):
+        trng = np.random.default_rng(t)
+        x = np.ones(m)
+        for k in range(n):
+            x = A[k] @ x + trng.normal(size=m) * sigma
+        e = C @ x - out_clean
+        acc += np.sum(e**2)
+    mc_var = acc / trials
+    pred_var = gain * sigma**2
+    assert mc_var == pytest.approx(pred_var, rel=0.15)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30))
+def test_int8_quant_bounds(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(8, 16)) * rng.uniform(0.1, 10))
+    q, s = quantize_int8(x)
+    assert q.dtype == jnp.int8
+    err = jnp.abs(dequantize_int8(q, s) - x)
+    # error ≤ scale/2 per channel
+    assert bool(jnp.all(err <= s / 2 + 1e-6))

@@ -1,0 +1,80 @@
+"""SSM blocks: chunk invariance (the j-step property on the real model) and
+prefill≡decode state equivalence."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import ssm
+
+
+@pytest.fixture
+def m1cfg():
+    return dataclasses.replace(get_smoke_config("falcon-mamba-7b"), remat=False)
+
+
+@pytest.fixture
+def m2cfg():
+    return dataclasses.replace(get_smoke_config("zamba2-1.2b"), remat=False)
+
+
+def test_mamba1_chunk_invariance(m1cfg, key):
+    p = ssm.mamba1_params(key, m1cfg)
+    u = jax.random.normal(jax.random.PRNGKey(1), (2, 64, m1cfg.d_model)) * 0.5
+    outs = [ssm.mamba1_prefill(p, m1cfg, u, chunk=c)[0] for c in (4, 16, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-4)
+
+
+def test_mamba2_chunk_invariance(m2cfg, key):
+    p = ssm.mamba2_params(key, m2cfg)
+    u = jax.random.normal(jax.random.PRNGKey(2), (2, 64, m2cfg.d_model)) * 0.5
+    outs = [ssm.mamba2_prefill(p, m2cfg, u, chunk=c)[0] for c in (8, 32, 64)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-4, rtol=1e-4)
+
+
+@pytest.mark.parametrize("which", ["mamba1", "mamba2"])
+def test_prefill_state_equals_decode_rollout(which, m1cfg, m2cfg, key):
+    """Running T tokens through prefill == feeding them one-by-one through
+    the decode step (state-space f applied T times)."""
+    cfg = m1cfg if which == "mamba1" else m2cfg
+    params_fn = ssm.mamba1_params if which == "mamba1" else ssm.mamba2_params
+    prefill = ssm.mamba1_prefill if which == "mamba1" else ssm.mamba2_prefill
+    decode = ssm.mamba1_decode if which == "mamba1" else ssm.mamba2_decode
+    init_state = ssm.mamba1_init_state if which == "mamba1" else ssm.mamba2_init_state
+
+    p = params_fn(key, cfg)
+    B, T = 2, 12
+    u = jax.random.normal(jax.random.PRNGKey(3), (B, T, cfg.d_model)) * 0.5
+
+    y_pre, st_pre = prefill(p, cfg, u, chunk=4)
+
+    st = init_state(cfg, B)
+    ys = []
+    for t in range(T):
+        y_t, st = decode(p, cfg, u[:, t:t + 1], st)
+        ys.append(y_t)
+    y_dec = jnp.concatenate(ys, axis=1)
+
+    np.testing.assert_allclose(y_dec, y_pre, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(st["h"], st_pre["h"], atol=2e-4, rtol=1e-3)
+    jax.tree.map(
+        lambda a, b: np.testing.assert_allclose(a, b, atol=1e-5),
+        st["conv"], st_pre["conv"],
+    )
+
+
+def test_mamba1_kernel_path_matches(m1cfg, key):
+    """cfg.use_pallas routes through the Pallas kernel (interpret mode)."""
+    p = ssm.mamba1_params(key, m1cfg)
+    u = jax.random.normal(jax.random.PRNGKey(4), (2, 32, m1cfg.d_model)) * 0.5
+    y_jnp, st_j = ssm.mamba1_prefill(p, m1cfg, u)
+    cfgP = dataclasses.replace(m1cfg, use_pallas=True)
+    y_pal, st_p = ssm.mamba1_prefill(p, cfgP, u)
+    np.testing.assert_allclose(y_pal, y_jnp, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(st_p["h"], st_j["h"], atol=1e-4, rtol=1e-3)

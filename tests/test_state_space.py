@@ -1,0 +1,138 @@
+"""Property tests for the core state-space machinery (paper §II–III)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    StateSpaceModel,
+    cslow_scan,
+    cslow_vectorized,
+    jstep_dense_scan,
+    linear_recurrence_assoc,
+    linear_recurrence_chunked,
+    linear_recurrence_serial,
+    mlp_forward,
+    nn_state_space,
+    pipeline_utilization,
+    run_direct,
+    run_scan,
+    stepwise_dense_scan,
+)
+
+
+def _mlp(key, n, m):
+    kw, kb, kx = jax.random.split(key, 3)
+    W = jax.random.normal(kw, (n, m, m)) * 0.5
+    b = 0.1 * jax.random.normal(kb, (n, m))
+    x0 = jax.random.normal(kx, (m,))
+    return W, b, x0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 8), m=st.integers(1, 6), seed=st.integers(0, 2**30))
+def test_scan_equals_direct(n, m, seed):
+    """Resource-shared (scan) execution ≡ fully-parallel (direct) — §IV-A."""
+    W, b, x0 = _mlp(jax.random.PRNGKey(seed), n, m)
+    model = nn_state_space(jnp.tanh)
+    xs, ys = run_scan(model, {"W": W, "b": b}, x0, None)
+    xd, yd = run_direct(model, [{"W": W[i], "b": b[i]} for i in range(n)], x0, None)
+    np.testing.assert_allclose(xs, xd, atol=1e-6)
+    np.testing.assert_allclose(ys[-1], yd[-1], atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), unroll=st.sampled_from([1, 2, 4]))
+def test_scan_unroll_invariance(seed, unroll):
+    """The paper's resource/speed knob j (scan unroll) is semantics-free."""
+    W, b, x0 = _mlp(jax.random.PRNGKey(seed), 8, 4)
+    model = nn_state_space(jnp.tanh)
+    x1, _ = run_scan(model, {"W": W, "b": b}, x0, None, unroll=1)
+    xj, _ = run_scan(model, {"W": W, "b": b}, x0, None, unroll=unroll)
+    np.testing.assert_allclose(x1, xj, atol=1e-6)
+
+
+def test_mealy_vs_moore(key):
+    """Moore output ignores the current input; Mealy sees it — §II-B."""
+    f = lambda p, x, u, k: x * 0.5 + (0 if u is None else u)
+    g = lambda p, x, u, k: x + (0 if u is None else u)
+    x0 = jnp.ones(3)
+    us = jnp.ones((4, 3))
+    _, y_mealy = run_scan(StateSpaceModel(f, g, "mealy"), None, x0, us, length=4)
+    _, y_moore = run_scan(StateSpaceModel(f, g, "moore"), None, x0, us, length=4)
+    assert not np.allclose(y_mealy, y_moore)
+    np.testing.assert_allclose(y_mealy[0], x0 + 1, atol=1e-6)
+    np.testing.assert_allclose(y_moore[0], x0, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**30),
+    j=st.sampled_from([1, 2, 4, 8]),
+    m=st.integers(2, 5),
+)
+def test_jstep_equals_stepwise(seed, j, m):
+    """Φ_{k,j} composition ≡ step-by-step products (paper eq. 5 / Fig. 3)."""
+    key = jax.random.PRNGKey(seed)
+    A = jax.random.normal(key, (8, m, m)) * 0.4
+    x0 = jnp.ones(m)
+    np.testing.assert_allclose(
+        jstep_dense_scan(A, x0, j), stepwise_dense_scan(A, x0), atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**30), chunk=st.sampled_from([1, 2, 4, 8, 16]))
+def test_linear_recurrence_forms_agree(seed, chunk):
+    """serial ≡ chunked (j-step) ≡ associative-scan (max-j) executions."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    a = jax.random.uniform(k1, (16, 5), minval=0.3, maxval=1.2)
+    b = jax.random.normal(k2, (16, 5))
+    h0 = jnp.zeros(5)
+    r_serial = linear_recurrence_serial(a, b, h0)
+    np.testing.assert_allclose(
+        linear_recurrence_chunked(a, b, h0, chunk), r_serial, atol=2e-4
+    )
+    np.testing.assert_allclose(
+        linear_recurrence_assoc(a, b, h0), r_serial, atol=2e-4
+    )
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**30), C=st.sampled_from([1, 2, 3, 4]))
+def test_cslow_equals_independent_streams(seed, C):
+    """C-slow interleave ≡ running the C streams independently (Fig. 5)."""
+    key = jax.random.PRNGKey(seed)
+    W, b, _ = _mlp(key, 5, 4)
+    x0s = jax.random.normal(key, (C, 4))
+    model = nn_state_space(jnp.tanh)
+    xs_c, ys_c = cslow_scan(model, {"W": W, "b": b}, x0s, None, num_streams=C)
+    xs_v, ys_v = cslow_vectorized(model, {"W": W, "b": b}, x0s, None)
+    for c in range(C):
+        ref, _ = run_scan(model, {"W": W, "b": b}, x0s[c], None)
+        np.testing.assert_allclose(xs_c[c], ref, atol=1e-6)
+        np.testing.assert_allclose(xs_v[c], ref, atol=1e-6)
+
+
+def test_pipeline_utilization_formula():
+    # P stages, C microbatches: C·P useful of P·(P+C-1) slots
+    assert pipeline_utilization(1, 1) == 1.0
+    assert pipeline_utilization(4, 1) == pytest.approx(0.25)
+    assert pipeline_utilization(4, 12) == pytest.approx(48 / 60)
+    # C -> inf: utilization -> 1
+    assert pipeline_utilization(8, 10_000) > 0.999
+
+
+def test_mlp_forward_matches_manual(key):
+    W, b, x0 = _mlp(key, 4, 4)
+    beta = jax.random.normal(key, (4, 3))
+    C = jax.random.normal(key, (2, 4))
+    u = jnp.asarray([0.1, -0.2, 0.3])
+    y = mlp_forward(W, b, beta, C, u)
+    x = beta @ u
+    for i in range(4):
+        x = jnp.tanh(W[i] @ x + b[i])
+    np.testing.assert_allclose(y, C @ x, atol=1e-6)

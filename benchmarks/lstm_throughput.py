@@ -1,0 +1,76 @@
+"""LSTM throughput: the paper's resource/speed compromise on a recurrent cell.
+
+Sweeps the two knobs of §III exactly like the Fig. 5 benchmark, but on the
+flagship recurrent workload:
+
+  (a) unroll j — datapath copies per scan stage (``run_scan(unroll=j)``);
+  (b) C-slow   — C independent streams batched through one datapath
+      (``cslow_vectorized``), the continuous-batching decode regime.
+
+Also times the fused Pallas kernel (interpret mode on CPU — a correctness
+path here; the TPU numbers are the deployment story) against the jnp scan.
+"""
+
+from __future__ import annotations
+
+import csv
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.cslow import cslow_vectorized
+from repro.recurrent import cells as rnn_cells
+
+from .common import emit, time_call
+
+
+def run(out_dir: str = "experiments") -> list[dict]:
+    key = jax.random.PRNGKey(0)
+    T, D, H = 256, 128, 128
+    params = rnn_cells.lstm_params(key, D, H)
+    rows = []
+
+    # --- (a) unroll sweep: one stream, j datapath copies ---
+    us = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+    base_us = None
+    for j in (1, 2, 4, 8):
+        f = jax.jit(lambda us, j=j: rnn_cells.run_cell("lstm", params, us, unroll=j)[0])
+        t_us = time_call(f, us)
+        base_us = base_us or t_us
+        rows.append({"knob": "unroll", "value": j, "us_per_call": round(t_us, 1),
+                     "speedup": round(base_us / t_us, 2)})
+        emit(f"lstm_unroll_j{j}", t_us, f"speedup={rows[-1]['speedup']}x")
+
+    # --- (b) C-slow sweep: C streams through the one compiled datapath ---
+    model = rnn_cells.lstm_cell(params)
+    one_stream_us = None
+    for C in (1, 2, 4, 8):
+        x0s = rnn_cells.init_carry("lstm", params, (C,))
+        uss = jax.random.normal(jax.random.PRNGKey(C), (C, T, D))
+        f = jax.jit(lambda x0s, uss: cslow_vectorized(model, None, x0s, uss)[0])
+        t_us = time_call(f, x0s, uss)
+        per_stream = t_us / C
+        one_stream_us = one_stream_us or t_us
+        rows.append({"knob": "cslow", "value": C, "us_per_call": round(t_us, 1),
+                     "speedup": round(one_stream_us / per_stream, 2)})
+        emit(f"lstm_cslow_C{C}", t_us, f"per_stream={per_stream:.0f}us")
+
+    # --- fused kernel (interpret on CPU) vs jnp oracle ---
+    from repro.kernels.lstm_cell.ops import lstm_seq, lstm_seq_ref
+
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, T, D))
+    t_ref = time_call(jax.jit(lambda x: lstm_seq_ref(
+        x, params["w_x"], params["w_h"], params["b"],
+        jnp.zeros((4, H)), jnp.zeros((4, H)))[0]), x)
+    t_k = time_call(lambda x: lstm_seq(x, params["w_x"], params["w_h"], params["b"])[0], x)
+    rows.append({"knob": "kernel", "value": 0, "us_per_call": round(t_k, 1),
+                 "speedup": round(t_ref / t_k, 2)})
+    emit("lstm_kernel_interpret", t_k, f"jnp_ref={t_ref:.0f}us")
+
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, "lstm_throughput.csv"), "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=rows[0].keys())
+        w.writeheader()
+        w.writerows(rows)
+    return rows

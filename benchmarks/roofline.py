@@ -79,6 +79,10 @@ def active_matmul_params(cfg: ModelConfig) -> float:
             total += mamba1_params()
         elif kind == "mamba2":
             total += mamba2_params()
+        elif kind == "recurrent":
+            H = cfg.rnn_hidden_actual
+            gates = 4 if cfg.rnn_cell == "lstm" else 3
+            total += (d + H) * gates * H + H * d  # fused cell + out-proj
         elif kind == "shared_attn":
             total += attn_params() + mlp_params(cfg.d_ff)
             r = cfg.shared_attn_lora_rank

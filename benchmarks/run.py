@@ -8,7 +8,9 @@ CSVs under ``experiments/``.
   table1 — generator API units (paper Table I)
   fig3   — j-step Φ pipelining (paper Fig. 3)
   fig5   — C-slow retiming (paper Fig. 5)
+  lstm   — recurrent-cell throughput (unroll/C-slow sweeps + fused kernel)
   kernels— kernel reference micro-benches
+  int8   — weight-only int8 serving comparison
   roofline — §Roofline terms from the dry-run artifacts
 """
 
@@ -21,12 +23,13 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: fig11 fig10 table1 fig3 fig5 kernels roofline")
+                    help="subset: fig11 fig10 table1 fig3 fig5 lstm kernels int8 roofline")
     ap.add_argument("--out", default="experiments")
     args = ap.parse_args()
 
     from . import (fig3_jstep, fig5_cslow, fig10_generator, fig11_snr,
-                   int8_serving, kernels_bench, roofline, table1_api)
+                   int8_serving, kernels_bench, lstm_throughput, roofline,
+                   table1_api)
 
     benches = {
         "fig11": lambda: fig11_snr.run(args.out),
@@ -34,6 +37,7 @@ def main() -> None:
         "table1": lambda: table1_api.run(args.out),
         "fig3": lambda: fig3_jstep.run(args.out),
         "fig5": lambda: fig5_cslow.run(args.out),
+        "lstm": lambda: lstm_throughput.run(args.out),
         "kernels": lambda: kernels_bench.run(args.out),
         "int8": lambda: int8_serving.run(args.out),
         "roofline": lambda: roofline.run(args.out),

@@ -1,0 +1,73 @@
+"""Recurrent-cell quickstart: LSTM/GRU as state-space systems, three views.
+
+  1. cell level  — ``run_cell`` executes an LSTM through the shared
+     ``run_scan`` datapath; the same cell C-slows over independent streams.
+  2. synthesis   — a recurrent ``NetworkSpec`` through the push-button
+     ``synthesize()`` flow (spec → StableHLO "RTL" → report).
+  3. serving     — a paper-lstm ModelConfig decoding under continuous
+     batching; the per-slot state is just the O(1) (h, c) carry.
+
+    python -m examples.recurrent_lm --cell lstm --requests 6
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.core.cslow import cslow_vectorized
+from repro.core.synthesis import NetworkSpec, synthesize
+from repro.models import lm
+from repro.recurrent import cells as rnn_cells
+from repro.runtime import DecodeServer, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", choices=("lstm", "gru"), default="lstm")
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+
+    # --- 1. the cell as a state-space system ---
+    key = jax.random.PRNGKey(0)
+    T, D, H, C = 32, 16, 24, 4
+    ctor = rnn_cells.lstm_params if args.cell == "lstm" else rnn_cells.gru_params
+    params = ctor(key, D, H)
+    us = jax.random.normal(jax.random.PRNGKey(1), (T, D))
+    carry, ys = rnn_cells.run_cell(args.cell, params, us)
+    print(f"{args.cell}: one stream   y[{T}] -> last norm "
+          f"{float(jnp.linalg.norm(ys[-1])):.3f}")
+
+    model = rnn_cells.make_cell(args.cell, params)
+    x0s = rnn_cells.init_carry(args.cell, params, (C,))
+    uss = jax.random.normal(jax.random.PRNGKey(2), (C, T, D))
+    _, ys_c = cslow_vectorized(model, None, x0s, uss)
+    print(f"{args.cell}: C-slow x{C}   outputs {ys_c.shape} (one datapath)")
+
+    # --- 2. push-button synthesis of a recurrent spec ---
+    spec = NetworkSpec(num_inputs=D, num_hidden_layers=2, nodes_per_layer=H,
+                       num_outputs=4, cell=args.cell, seq_len=T)
+    print("synthesize:", synthesize(spec, batch=8).summary())
+
+    # --- 3. continuous-batching decode with (h, c) slot states ---
+    cfg = get_smoke_config("paper-lstm")
+    if args.cell == "gru":
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, rnn_cell="gru")
+    srv = DecodeServer(cfg, lm.init_params(cfg, key), num_slots=3, max_seq=48)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        srv.submit(Request(uid=i, prompt=list(rng.integers(1, cfg.vocab, size=4)),
+                           max_new_tokens=8))
+    done = srv.run_until_drained()
+    toks = sum(len(r.out_tokens) for r in done)
+    state_bytes = cfg.kv_cache_bytes(batch=3, seq=48)
+    print(f"served {len(done)} requests, {toks} tokens; "
+          f"decode state = {state_bytes} bytes total ({args.cell} carries)")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ _MODULES = {
     "phi4-mini-3.8b": "phi4_mini_3_8b",
     "llama-3.2-vision-90b": "llama_3_2_vision_90b",
     "zamba2-1.2b": "zamba2_1_2b",
+    "paper-lstm": "paper_lstm",
 }
 
 ARCH_IDS = tuple(_MODULES)

@@ -37,6 +37,28 @@ PyTree = Any
 StateFn = Callable[..., PyTree]   # f(params_k, x, u, k) -> x_next
 OutputFn = Callable[..., PyTree]  # g(params_k, x, u, k) -> y
 
+# The one activation table (the paper's Create_AF unit).  Shared by
+# ``synthesis.create_af``, ``models.layers``, and the jit'd forward paths so
+# every advertised name resolves everywhere (``getattr(jnp, name)`` only
+# covered tanh — sigmoid/gelu/silu live in jax.nn, identity nowhere).
+ACTIVATIONS: dict[str, Callable[[jnp.ndarray], jnp.ndarray]] = {
+    "tanh": jnp.tanh,
+    "relu": jax.nn.relu,
+    "sigmoid": jax.nn.sigmoid,
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "identity": lambda x: x,
+}
+
+
+def resolve_activation(name: str) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    try:
+        return ACTIVATIONS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown activation '{name}'; available: {sorted(ACTIVATIONS)}"
+        ) from None
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -181,8 +203,7 @@ def nn_state_space(
 
 @partial(jax.jit, static_argnames=("activation_name", "unroll"))
 def _mlp_forward_jit(stacked, x0, C, activation_name: str, unroll: int):
-    act = getattr(jnp, activation_name) if activation_name != "relu" else jax.nn.relu
-    model = nn_state_space(act)
+    model = nn_state_space(resolve_activation(activation_name))
     xN, _ = run_scan(model, stacked, x0, None, unroll=unroll)
     return C @ xN
 

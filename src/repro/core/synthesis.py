@@ -30,7 +30,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .state_space import mlp_forward
+from .state_space import mlp_forward, resolve_activation
 
 
 # ---------------------------------------------------------------------------
@@ -44,6 +44,11 @@ class NetworkSpec:
     nodes_per_layer: int
     num_outputs: int
     activation: str = "tanh"
+    # Cell type: "mlp" is the paper's case-study feed-forward network
+    # (layers-as-time); "lstm"/"gru" are the intrinsically recurrent form the
+    # paper names as its flagship application (inputs-as-time, seq_len steps).
+    cell: str = "mlp"
+    seq_len: int = 0         # required (> 0) for recurrent cells
     # Resource/speed compromise (paper: clk_max vs clk_data):
     unroll: int = 1          # j datapath copies per scan stage
     c_slow: int = 1          # independent interleaved streams
@@ -53,10 +58,17 @@ class NetworkSpec:
 
     @property
     def name(self) -> str:
+        tag = "nn" if self.cell == "mlp" else self.cell
         return (
-            f"nn_{self.num_inputs}i_{self.num_hidden_layers}x"
+            f"{tag}_{self.num_inputs}i_{self.num_hidden_layers}x"
             f"{self.nodes_per_layer}_{self.num_outputs}o"
         )
+
+    @property
+    def serial_steps(self) -> int:
+        """Length of the time-multiplexed axis: layers for the MLP form,
+        sequence steps for recurrent cells."""
+        return self.num_hidden_layers if self.cell == "mlp" else self.seq_len
 
 
 # ---------------------------------------------------------------------------
@@ -73,15 +85,8 @@ def create_mult(dtype=jnp.float32) -> Callable:
 
 
 def create_af(activation: str) -> Callable:
-    """The activation-function unit for hidden nodes."""
-    table = {
-        "tanh": jnp.tanh,
-        "relu": jax.nn.relu,
-        "sigmoid": jax.nn.sigmoid,
-        "gelu": jax.nn.gelu,
-        "identity": lambda x: x,
-    }
-    return table[activation]
+    """The activation-function unit for hidden nodes (shared core table)."""
+    return resolve_activation(activation)
 
 
 def create_af_end(activation: str = "identity") -> Callable:
@@ -110,11 +115,44 @@ def create_layer_end(nodes: int, num_outputs: int, key) -> jnp.ndarray:
 def create_top_module(spec: NetworkSpec):
     """Wire the modules into the full state-space network (paper eq. 8).
 
-    Returns (params, forward) where ``forward(params, u)`` maps a single
-    input vector (or a batch, via vmap) to the outputs.
+    Returns (params, forward).  For the MLP form ``forward(params, u)`` maps
+    a single input vector to the outputs (layers-as-time); for recurrent
+    cells it maps an input *sequence* ``u: [seq_len, num_inputs]`` through
+    ``spec.num_hidden_layers`` stacked cells to the readout of the final
+    carry (inputs-as-time — the same shared datapath, driven by data instead
+    of depth).  Batching either form is ``jax.vmap``.
     """
     key = jax.random.PRNGKey(spec.seed)
     k1, k2, k3 = jax.random.split(key, 3)
+
+    if spec.cell != "mlp":
+        if spec.seq_len <= 0:
+            raise ValueError(f"recurrent spec '{spec.cell}' requires seq_len > 0")
+        from repro.recurrent import cells as rnn_cells
+
+        ctor = rnn_cells.lstm_params if spec.cell == "lstm" else rnn_cells.gru_params
+        layer_keys = jax.random.split(k2, spec.num_hidden_layers)
+        cell_params = [
+            ctor(layer_keys[i],
+                 spec.num_inputs if i == 0 else spec.nodes_per_layer,
+                 spec.nodes_per_layer)
+            for i in range(spec.num_hidden_layers)
+        ]
+        C = create_layer_end(spec.nodes_per_layer, spec.num_outputs, k3)
+        params = {"cells": cell_params, "C": C}
+
+        def forward(params, u):
+            ys = u  # [T, D] time-major
+            carry = None
+            for cp in params["cells"]:
+                carry, ys = rnn_cells.run_cell(
+                    spec.cell, cp, ys, unroll=spec.unroll
+                )
+            h_final = carry[0] if spec.cell == "lstm" else carry
+            return params["C"] @ h_final
+
+        return params, forward
+
     beta = create_layer1(spec.num_inputs, spec.nodes_per_layer, k1)
     W, b = create_layer(spec.nodes_per_layer, spec.num_hidden_layers, k2)
     C = create_layer_end(spec.nodes_per_layer, spec.num_outputs, k3)
@@ -160,7 +198,9 @@ def synthesize(spec: NetworkSpec, batch: int | None = None) -> SynthesisReport:
     fwd = forward
     if batch is not None:
         fwd = jax.vmap(forward, in_axes=(None, 0))
-    u_shape = (spec.num_inputs,) if batch is None else (batch, spec.num_inputs)
+    u_shape = (spec.num_inputs,) if spec.cell == "mlp" else (spec.seq_len, spec.num_inputs)
+    if batch is not None:
+        u_shape = (batch,) + u_shape
     u = jax.ShapeDtypeStruct(u_shape, jnp.float32)
 
     t0 = time.perf_counter()
@@ -171,6 +211,8 @@ def synthesize(spec: NetworkSpec, batch: int | None = None) -> SynthesisReport:
 
     try:
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0]
         flops = float(cost.get("flops", float("nan")))
     except Exception:
         flops = None
@@ -194,5 +236,5 @@ def synthesize(spec: NetworkSpec, batch: int | None = None) -> SynthesisReport:
         flops=flops,
         peak_bytes=peak,
         output_shape=(spec.num_outputs,) if batch is None else (batch, spec.num_outputs),
-        serial_depth=serial_depth_estimate(spec.num_hidden_layers, spec.unroll),
+        serial_depth=serial_depth_estimate(spec.serial_steps, spec.unroll),
     )

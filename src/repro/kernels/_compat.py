@@ -1,0 +1,14 @@
+"""Version compatibility for Pallas TPU APIs.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` across
+jax releases; resolve whichever this environment provides so the kernels
+import on both sides of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

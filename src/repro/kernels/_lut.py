@@ -1,0 +1,32 @@
+"""Shared ROM-LUT interpolation (paper §IV-B), used inside kernel bodies.
+
+One implementation of the clip → position → one-hot-gather → linear-interp
+idiom so the ``tanh_lut`` kernel and the quantized gate path of ``lstm_cell``
+cannot drift apart.  The gather is a one-hot × table contraction (dynamic
+per-lane gathers don't vectorize on the VPU; one-hot on the MXU is the
+standard trick).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RANGE = 4.0  # table domain [-RANGE, RANGE); matches tanh_lut.ref.make_lut
+
+
+def lut_interpolate(v, lut, lut1, n: int):
+    """Interpolated table lookup.  v: any shape (f32); lut/lut1: [n] where
+    ``lut1`` is ``lut`` shifted left by one entry (last entry repeated)."""
+    xf = jnp.clip(v, -RANGE, RANGE - 1e-6)
+    pos = (xf + RANGE) / (2 * RANGE) * n - 0.5
+    i0 = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, n - 1)
+    frac = pos - i0.astype(jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, v.shape + (n,), v.ndim)
+    onehot = (i0[..., None] == iota).astype(jnp.float32)
+    return (onehot @ lut) * (1 - frac) + (onehot @ lut1) * frac
+
+
+def shifted_table(lut):
+    """The interpolation partner table: lut shifted by one, edge repeated."""
+    return jnp.concatenate([lut[1:], lut[-1:]])

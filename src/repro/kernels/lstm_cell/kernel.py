@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused LSTM cell — the recurrent datapath in VMEM.
+
+One grid step processes a [bb, ct] (batch-block × time-chunk) tile.  Per
+step the four gate pre-activations are ONE [bb, D+H] × [D+H, 4H] MXU
+contraction (input and hidden matmuls fused by concatenation — the paper's
+single shared MACC array serving all four gates), sigmoid/tanh are applied
+in-VMEM on the VPU, and the ``(h, c)`` carry lives in VMEM scratch that
+persists across the sequential chunk axis — the state register of the
+paper's eq. 1 datapath, never spilled to HBM between chunks.
+
+Grid: (Bsz/bb, T/ct); batch parallel, chunk axis "arbitrary" (sequential)
+so the carry scratch is live across chunks.  VMEM per step: x tile
+[bb·ct·D], weights [(D+H)·4H], carry 2·[bb·H] — ~1 MB at the defaults.
+
+Quantized path (paper §IV-B): ``lut`` switches the gate activations to the
+ROM-LUT idiom of ``kernels.tanh_lut`` — one-hot × table MXU contractions
+with linear interpolation; σ(x) = (1 + tanh(x/2)) / 2 reuses the same table.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+from repro.kernels._lut import lut_interpolate, shifted_table
+
+DEFAULT_CHUNK = 32
+DEFAULT_BLOCK_B = 8
+
+
+def _make_acts(lut_refs, n_lut: int):
+    if n_lut:
+        lut = lut_refs[0][0, :]
+        lut1 = lut_refs[1][0, :]
+        tanh = lambda v: lut_interpolate(v, lut, lut1, n_lut)
+    else:
+        tanh = jnp.tanh
+    sig = lambda v: 0.5 * (1.0 + tanh(0.5 * v))
+    return tanh, sig
+
+
+def _lstm_kernel(x_ref, W_ref, b_ref, h0_ref, c0_ref, *rest,
+                 ct: int, H: int, last_chunk: int, n_lut: int):
+    lut_refs, (y_ref, hout_ref, cout_ref), (h_scr, c_scr) = (
+        rest[: 2 if n_lut else 0], rest[-5:-2], rest[-2:]
+    )
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = h0_ref[...].astype(jnp.float32)
+        c_scr[...] = c0_ref[...].astype(jnp.float32)
+
+    tanh, sig = _make_acts(lut_refs, n_lut)
+    W = W_ref[...].astype(jnp.float32)       # [D+H, 4H]
+    b = b_ref[...].astype(jnp.float32)       # [1, 4H]
+    h, c = h_scr[...], c_scr[...]            # [bb, H] f32
+
+    ys = []
+    for t in range(ct):                      # static unroll within the chunk
+        xt = x_ref[:, t, :].astype(jnp.float32)           # [bb, D]
+        z = jnp.concatenate([xt, h], axis=-1) @ W + b     # ONE contraction
+        i_g = sig(z[:, :H])
+        f_g = sig(z[:, H : 2 * H])
+        g_g = tanh(z[:, 2 * H : 3 * H])
+        o_g = sig(z[:, 3 * H :])
+        c = f_g * c + i_g * g_g
+        h = o_g * tanh(c)
+        ys.append(h)
+
+    y_ref[...] = jnp.stack(ys, axis=1).astype(y_ref.dtype)
+    h_scr[...] = h
+    c_scr[...] = c
+
+    @pl.when(ci == last_chunk)
+    def _fin():
+        hout_ref[...] = h
+        cout_ref[...] = c
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "block_b", "interpret"))
+def lstm_seq(x, w_x, w_h, b, h0, c0, lut=None, *, chunk: int = DEFAULT_CHUNK,
+             block_b: int = DEFAULT_BLOCK_B, interpret: bool = False):
+    """Fused-cell LSTM over a sequence.  Shapes as in ``ref.lstm_seq_ref``."""
+    Bsz, T, D = x.shape
+    H = w_h.shape[0]
+    ct = min(chunk, T)
+    while T % ct:
+        ct //= 2
+    bb = min(block_b, Bsz)
+    while Bsz % bb:
+        bb //= 2
+
+    W = jnp.concatenate([w_x, w_h], axis=0)  # [D+H, 4H]
+    n_lut = 0 if lut is None else lut.shape[0]
+
+    grid = (Bsz // bb, T // ct)
+    kernel = functools.partial(
+        _lstm_kernel, ct=ct, H=H, last_chunk=T // ct - 1, n_lut=n_lut
+    )
+
+    in_specs = [
+        pl.BlockSpec((bb, ct, D), lambda i, c: (i, c, 0)),        # x
+        pl.BlockSpec((D + H, 4 * H), lambda i, c: (0, 0)),        # W
+        pl.BlockSpec((1, 4 * H), lambda i, c: (0, 0)),            # b
+        pl.BlockSpec((bb, H), lambda i, c: (i, 0)),               # h0
+        pl.BlockSpec((bb, H), lambda i, c: (i, 0)),               # c0
+    ]
+    operands = [x, W, b[None], h0, c0]
+    if n_lut:
+        lut1 = shifted_table(lut)
+        in_specs += [
+            pl.BlockSpec((1, n_lut), lambda i, c: (0, 0)),        # lut
+            pl.BlockSpec((1, n_lut), lambda i, c: (0, 0)),        # lut shifted
+        ]
+        operands += [lut[None].astype(jnp.float32), lut1[None].astype(jnp.float32)]
+
+    y, h_final, c_final = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bb, ct, H), lambda i, c: (i, c, 0)),    # y
+            pl.BlockSpec((bb, H), lambda i, c: (i, 0)),           # h_final
+            pl.BlockSpec((bb, H), lambda i, c: (i, 0)),           # c_final
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, T, H), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H), jnp.float32),
+            jax.ShapeDtypeStruct((Bsz, H), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bb, H), jnp.float32),
+            pltpu.VMEM((bb, H), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")
+        ),
+        interpret=interpret,
+    )(*operands)
+    return y, h_final, c_final

@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the fused LSTM cell kernel.
+
+Contract (matches kernel and ops):
+    y, h_final, c_final = lstm_seq(x, w_x, w_h, b, h0, c0)
+      x        : [Bsz, T, D]
+      w_x      : [D, 4H]      fused gates, order (i, f, g, o)
+      w_h      : [H, 4H]
+      b        : [4H]
+      h0, c0   : [Bsz, H]     (zeros when omitted)
+    step: z  = [x_t, h] @ [w_x; w_h] + b          (ONE [D+H, 4H] contraction)
+          c' = σ(z_f)·c + σ(z_i)·tanh(z_g)
+          h' = σ(z_o)·tanh(c');   y_t = h'
+
+The LUT variant replaces tanh/σ with the paper's ROM-LUT activation
+(§IV-B): tanh from an interpolated table, σ(x) = (1 + tanh(x/2)) / 2.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _gates(z, H, tanh_fn, sig_fn):
+    i_g = sig_fn(z[..., :H])
+    f_g = sig_fn(z[..., H : 2 * H])
+    g_g = tanh_fn(z[..., 2 * H : 3 * H])
+    o_g = sig_fn(z[..., 3 * H :])
+    return i_g, f_g, g_g, o_g
+
+
+def _lstm_seq(x, w_x, w_h, b, h0, c0, tanh_fn, sig_fn):
+    x = x.astype(jnp.float32)
+    W = jnp.concatenate([w_x, w_h], axis=0).astype(jnp.float32)  # [D+H, 4H]
+    b = b.astype(jnp.float32)
+    H = w_h.shape[0]
+
+    def step(carry, x_t):
+        h, c = carry
+        z = jnp.concatenate([x_t, h], axis=-1) @ W + b
+        i_g, f_g, g_g, o_g = _gates(z, H, tanh_fn, sig_fn)
+        c = f_g * c + i_g * g_g
+        h = o_g * tanh_fn(c)
+        return (h, c), h
+
+    (h_f, c_f), ys = jax.lax.scan(step, (h0.astype(jnp.float32), c0.astype(jnp.float32)),
+                                  jnp.moveaxis(x, 1, 0))
+    return jnp.moveaxis(ys, 0, 1), h_f, c_f
+
+
+def lstm_seq_ref(x, w_x, w_h, b, h0, c0):
+    return _lstm_seq(x, w_x, w_h, b, h0, c0, jnp.tanh, jax.nn.sigmoid)
+
+
+def lstm_seq_lut_ref(x, w_x, w_h, b, h0, c0, lut):
+    """Oracle for the quantized path: gate activations via the tanh ROM-LUT."""
+    from repro.kernels.tanh_lut.ref import tanh_lut_ref
+
+    tanh_fn = lambda v: tanh_lut_ref(v, lut)
+    sig_fn = lambda v: 0.5 * (1.0 + tanh_fn(0.5 * v))
+    return _lstm_seq(x, w_x, w_h, b, h0, c0, tanh_fn, sig_fn)

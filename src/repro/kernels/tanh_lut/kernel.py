@@ -17,23 +17,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-RANGE = 4.0
+from repro.kernels._compat import CompilerParams
+from repro.kernels._lut import RANGE, lut_interpolate, shifted_table
+
 DEFAULT_BLOCK = 1024
 
 
 def _kernel(x_ref, lut_ref, lut1_ref, o_ref, *, n):
     x = x_ref[...].astype(jnp.float32)          # [1, bs]
-    xf = jnp.clip(x, -RANGE, RANGE - 1e-6)
-    pos = (xf + RANGE) / (2 * RANGE) * n - 0.5
-    i0 = jnp.clip(jnp.floor(pos).astype(jnp.int32), 0, n - 1)
-    frac = pos - i0.astype(jnp.float32)
-
-    # one-hot gather on the MXU: [bs, n] @ [n] tables
-    iota = jax.lax.broadcasted_iota(jnp.int32, (x.shape[1], n), 1)
-    onehot = (i0[0, :, None] == iota).astype(jnp.float32)
-    y0 = onehot @ lut_ref[0, :]
-    y1 = onehot @ lut1_ref[0, :]                # table shifted by one entry
-    o_ref[...] = ((y0 * (1 - frac[0]) + y1 * frac[0])[None]).astype(o_ref.dtype)
+    y = lut_interpolate(x[0], lut_ref[0, :], lut1_ref[0, :], n)
+    o_ref[...] = y[None].astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
@@ -46,7 +39,7 @@ def tanh_lut(x, lut, *, block: int = DEFAULT_BLOCK, interpret: bool = False):
     while S % bs:
         bs //= 2
     n = lut.shape[0]
-    lut1 = jnp.concatenate([lut[1:], lut[-1:]])
+    lut1 = shifted_table(lut)
 
     out = pl.pallas_call(
         functools.partial(_kernel, n=n),
@@ -58,7 +51,7 @@ def tanh_lut(x, lut, *, block: int = DEFAULT_BLOCK, interpret: bool = False):
         ],
         out_specs=pl.BlockSpec((1, bs), lambda i: (0, i)),
         out_shape=jax.ShapeDtypeStruct((1, S), x.dtype),
-        compiler_params=pltpu.CompilerParams(dimension_semantics=("parallel",)),
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(flat, lut[None], lut1[None])
     return out.reshape(shape)

@@ -117,6 +117,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 1,
     }
     try:
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0]
         rec["cost_analysis"] = {
             k: float(v) for k, v in cost.items()
             if isinstance(v, (int, float)) and (k in ("flops", "bytes accessed") or k.startswith("bytes accessed"))

@@ -120,6 +120,17 @@ def _op_defs(lines: list[str]):
             yield m.group(1), m.group(2), m.group(3), ln
 
 
+def _operand_names(argstr: str) -> list[str]:
+    """Operand names from an op's argument list.  Newer XLA prints bare
+    names (``dot(a, b)``); older prints typed operands
+    (``dot(f32[64,64]{1,0} %a, ...)``) where a comma-split would shred the
+    shapes — prefer the ``%name`` tokens when present."""
+    names = re.findall(r"%([\w.\-]+)", argstr)
+    if names:
+        return names
+    return [a.strip().lstrip("%") for a in argstr.split(",") if a.strip()]
+
+
 def _dot_flops(line: str, shapes: dict[str, str]) -> float:
     m = _DEF_RE.match(line)
     result_shape = m.group(2)
@@ -131,7 +142,7 @@ def _dot_flops(line: str, shapes: dict[str, str]) -> float:
         out_elems *= d
     # operands
     args = re.search(r"\b(?:dot|convolution)\(([^)]*)\)", line)
-    ops = [a.strip().lstrip("%") for a in args.group(1).split(",")] if args else []
+    ops = _operand_names(args.group(1)) if args else []
     lhs_shape = shapes.get(ops[0]) if ops else None
     if line.find(" dot(") >= 0:
         cm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
@@ -248,8 +259,7 @@ def analyze(hlo: str) -> ModuleStats:
                 b = _nbytes(shape)
                 args = re.search(r"\w+\(([^)]*)\)", ln)
                 if args:
-                    for a in args.group(1).split(","):
-                        a = a.strip().lstrip("%")
+                    for a in _operand_names(args.group(1)):
                         if a in shapes:
                             b += _nbytes(shapes[a])
                 traffic += f * b

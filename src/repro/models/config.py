@@ -22,13 +22,14 @@ BlockKind = Literal[
     "mamba1",        # Mamba-1 selective-scan block
     "mamba2",        # Mamba-2 / SSD block
     "shared_attn",   # Zamba-style shared transformer block (weights reused)
+    "recurrent",     # LSTM/GRU cell block (paper's intrinsic state-space NN)
 ]
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelConfig:
     name: str
-    family: Literal["dense", "moe", "ssm", "hybrid", "encoder", "vlm"]
+    family: Literal["dense", "moe", "ssm", "hybrid", "encoder", "vlm", "recurrent"]
     n_layers: int
     d_model: int
     vocab: int
@@ -70,6 +71,9 @@ class ModelConfig:
     ssm_chunk: int = 0               # 0 = per-impl default (the j knob)
     mamba_headdim: int = 64          # mamba2 only
     dt_rank: int = 0                 # mamba1; 0 = ceil(d_model/16)
+    # --- recurrent (LSTM/GRU) ---
+    rnn_cell: Literal["lstm", "gru"] = "lstm"
+    rnn_hidden: int = 0              # 0 = d_model
     # --- hybrid (zamba2) ---
     attn_block_period: int = 0       # shared attn applied once per N ssm blocks
     shared_attn_lora_rank: int = 0   # per-application LoRA on shared weights
@@ -111,6 +115,10 @@ class ModelConfig:
         return self.d_inner // self.mamba_headdim
 
     @property
+    def rnn_hidden_actual(self) -> int:
+        return self.rnn_hidden or self.d_model
+
+    @property
     def act_dtype(self):
         return jnp.dtype(self.dtype)
 
@@ -129,6 +137,8 @@ class ModelConfig:
         """
         if self.family == "ssm":
             return ("mamba1",)
+        if self.family == "recurrent":
+            return ("recurrent",)
         if self.family == "hybrid":
             return ("mamba2",) * self.attn_block_period + ("shared_attn",)
         if self.family == "moe":
@@ -172,6 +182,10 @@ class ModelConfig:
                 total += 2 * batch * s * self.n_kv_heads * self.head_dim * bpe
             elif kind == "shared_attn":
                 total += 2 * batch * seq * self.n_kv_heads * self.head_dim * bpe
+            elif kind == "recurrent":
+                # f32 (h, c) carry — O(1) in seq; the cheapest serving state
+                n_regs = 2 if self.rnn_cell == "lstm" else 1
+                total += batch * n_regs * self.rnn_hidden_actual * 4
             elif kind in ("mamba1", "mamba2"):
                 if kind == "mamba1":
                     total += batch * self.d_inner * (self.ssm_state + self.d_conv - 1) * 4
@@ -207,7 +221,7 @@ def applicable_shapes(cfg: ModelConfig) -> tuple[ShapeSpec, ...]:
     if cfg.is_decoder:
         shapes.append(DECODE_32K)
         sub_quadratic = (
-            cfg.family in ("ssm", "hybrid")
+            cfg.family in ("ssm", "hybrid", "recurrent")
             or (cfg.sliding_window > 0 and cfg.global_every > 0)  # mostly-local
         )
         if sub_quadratic:

@@ -102,7 +102,9 @@ def mlp_params(key, d_model: int, d_ff: int, gated: bool, dtype) -> PyTree:
 
 
 def _act(name: str):
-    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "tanh": jnp.tanh}[name]
+    from repro.core.state_space import resolve_activation
+
+    return resolve_activation(name)
 
 
 def mlp_apply(params, x, act: str = "silu"):

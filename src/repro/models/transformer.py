@@ -28,6 +28,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.recurrent import block as rnn_lib
+
 from . import attention as attn_lib
 from . import moe as moe_lib
 from . import ssm as ssm_lib
@@ -72,6 +74,9 @@ def _block_params(key, cfg: ModelConfig, kind: str) -> PyTree:
     if kind == "mamba2":
         return {"ln": rmsnorm_params(cfg.d_model, cfg.p_dtype),
                 "mamba": ssm_lib.mamba2_params(k1, cfg)}
+    if kind == "recurrent":
+        return {"ln": rmsnorm_params(cfg.d_model, cfg.p_dtype),
+                "rnn": rnn_lib.recurrent_params(k1, cfg)}
     if kind == "shared_attn":
         # Only the per-application pieces live here; weights are shared.
         return {
@@ -126,6 +131,8 @@ def _block_cache(cfg: ModelConfig, kind: str, batch: int, max_seq: int) -> PyTre
         return ssm_lib.mamba1_init_state(cfg, batch)
     if kind == "mamba2":
         return ssm_lib.mamba2_init_state(cfg, batch)
+    if kind == "recurrent":
+        return rnn_lib.recurrent_init_state(cfg, batch)
     if kind == "cross":
         return jnp.zeros((1,), jnp.float32)  # vision memory is static; dummy state
     raise ValueError(kind)
@@ -232,6 +239,16 @@ def apply_block(
             y, cache = fn_dec(p_blk["mamba"], cfg, h, cache)
         else:
             y, st = fn_pre(p_blk["mamba"], cfg, h)
+            cache = st if mode == "prefill" else None
+        return x + y, cache, aux
+
+    if kind == "recurrent":
+        # LSTM/GRU cell: the serving state IS the (h, c) carry (paper eq. 1)
+        h = rmsnorm(p_blk["ln"], x, cfg.norm_eps)
+        if decode:
+            y, cache = rnn_lib.recurrent_decode(p_blk["rnn"], cfg, h, cache)
+        else:
+            y, st = rnn_lib.recurrent_prefill(p_blk["rnn"], cfg, h)
             cache = st if mode == "prefill" else None
         return x + y, cache, aux
 

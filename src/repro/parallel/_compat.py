@@ -1,0 +1,24 @@
+"""Version compatibility for JAX SPMD APIs.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to ``jax.shard_map``
+across jax releases; resolve whichever this environment provides.
+"""
+
+from __future__ import annotations
+
+import jax
+
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # older jax
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+
+def _pcast_identity(x, axes=None, *, to=None):
+    # Pre-varying-axes jax: every array inside shard_map is implicitly
+    # device-varying, so the cast is a no-op.
+    return x
+
+
+pcast = getattr(jax.lax, "pcast", _pcast_identity)
+
+__all__ = ["shard_map", "pcast"]

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel._compat import shard_map
+
 PyTree = Any
 
 
@@ -58,7 +60,7 @@ def make_compressed_allreduce(mesh: Mesh, axis_name: str = "data"):
     """
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(axis_name), P(axis_name)),
         out_specs=(P(), P(axis_name)),

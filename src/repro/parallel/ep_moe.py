@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel._compat import shard_map
+
 from repro.models.config import ModelConfig
 
 PyTree = Any
@@ -46,7 +48,7 @@ def ep_moe_apply(p, cfg: ModelConfig, x, mesh: Mesh, *, axis: str = "model"):
     E_local = E // ep
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(
             {"router": P(), "w_in": P(axis), "w_gate": P(axis), "w_out": P(axis)},

@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.parallel._compat import pcast, shard_map
+
 PyTree = Any
 
 
@@ -39,7 +41,7 @@ def pipeline_apply(
     num_stages = mesh.shape[axis_name]
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(axis_name), P()),
         out_specs=P(),
@@ -52,8 +54,8 @@ def pipeline_apply(
 
         # the carry is device-varying (each stage holds different data):
         # mark it so, or the scan's carry typing rejects the ppermute output
-        buf = jax.lax.pcast(jnp.zeros_like(mb[0]), (axis_name,), to="varying")
-        outs = jax.lax.pcast(jnp.zeros_like(mb), (axis_name,), to="varying")
+        buf = pcast(jnp.zeros_like(mb[0]), (axis_name,), to="varying")
+        outs = pcast(jnp.zeros_like(mb), (axis_name,), to="varying")
 
         def tick(carry, t):
             buf, outs = carry

@@ -121,6 +121,10 @@ def _param_rules(cfg: ModelConfig, mesh: Mesh):
         (r".*mamba/D$",              P(None, tp)),
         (r".*mamba/out_proj$",       P(None, tp, f)),      # [G, DI, D]
         (r".*mamba/norm/scale$",     P(None, tp)),
+        # --- recurrent cells (LSTM/GRU): fused 4H/3H gate dim over TP ---
+        (r".*rnn/cell/w_[xh]$",      P(None, f, tp)),      # [G, D|H, 4H/3H]
+        (r".*rnn/cell/b(h_n)?$",     P(None, tp)),         # [G, 4H/3H]
+        (r".*rnn/w_out$",            P(None, tp, f)),      # [G, H, D]
         # --- norms & leftovers: replicated ---
         (r".*",                      P()),
     ]
@@ -210,7 +214,7 @@ def cache_specs(cfg: ModelConfig, cache_tree: PyTree, mesh: Mesh, *, shard_seq: 
         if "conv" in p:                     # [B, k-1, C]
             put(0, dp)
             put(2, tp)
-        elif re.search(r"/h$", p):          # mamba1 [B,DI,N] / mamba2 [B,H,P,N]
+        elif re.search(r"/[hc]$", p):       # mamba [B,DI,N] / rnn carry [B,H]
             put(0, dp)
             put(1, tp)
         elif re.search(r"(c_kv|k_rope)$", p):  # MLA latent [B,S,r]

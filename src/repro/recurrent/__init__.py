@@ -1,0 +1,37 @@
+"""Recurrent cells (LSTM/GRU) as first-class state-space systems."""
+
+from .block import (
+    recurrent_decode,
+    recurrent_init_state,
+    recurrent_params,
+    recurrent_prefill,
+)
+from .cells import (
+    cell_seq,
+    gru_cell,
+    gru_params,
+    gru_step,
+    init_carry,
+    lstm_cell,
+    lstm_params,
+    lstm_step,
+    make_cell,
+    run_cell,
+)
+
+__all__ = [
+    "cell_seq",
+    "gru_cell",
+    "gru_params",
+    "gru_step",
+    "init_carry",
+    "lstm_cell",
+    "lstm_params",
+    "lstm_step",
+    "make_cell",
+    "run_cell",
+    "recurrent_decode",
+    "recurrent_init_state",
+    "recurrent_params",
+    "recurrent_prefill",
+]

@@ -1,0 +1,93 @@
+"""Recurrent block for the layer stack: LN → LSTM/GRU cell → out-proj, residual.
+
+Mirrors ``models.ssm``'s prefill/decode/init_state contract so
+``models.transformer.apply_block`` treats a recurrent block exactly like a
+Mamba block: prefill runs the whole sequence and emits the final ``(h, c)``
+carry as the decode state; decode applies the one-step transition map.  The
+carry is the entire serving state — O(1) per slot, the cheapest cache in the
+framework (``ModelConfig.kv_cache_bytes`` accounts it as 2·H·4 bytes).
+
+Fast path: ``cfg.use_pallas`` routes LSTM prefill through the fused Pallas
+``lstm_cell`` kernel (one [4H, D+H] contraction per step, VMEM-resident
+carry); the jnp path runs the same math through ``cells.run_cell`` /
+``lax.scan`` and is the kernel's oracle.
+"""
+
+from __future__ import annotations
+
+from typing import Any, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+from . import cells
+
+if TYPE_CHECKING:
+    from repro.models.config import ModelConfig
+
+PyTree = Any
+
+
+def recurrent_params(key, cfg: "ModelConfig") -> PyTree:
+    D, H = cfg.d_model, cfg.rnn_hidden_actual
+    k1, k2 = jax.random.split(key)
+    ctor = cells.lstm_params if cfg.rnn_cell == "lstm" else cells.gru_params
+    return {
+        "cell": ctor(k1, D, H, cfg.p_dtype),
+        "w_out": dense_init(k2, (H, D), cfg.p_dtype),
+    }
+
+
+def recurrent_init_state(cfg: "ModelConfig", batch: int) -> PyTree:
+    H = cfg.rnn_hidden_actual
+    st = {"h": jnp.zeros((batch, H), jnp.float32)}
+    if cfg.rnn_cell == "lstm":
+        st["c"] = jnp.zeros((batch, H), jnp.float32)
+    return st
+
+
+def _carry_in(cfg: "ModelConfig", state: PyTree):
+    return (state["h"], state["c"]) if cfg.rnn_cell == "lstm" else state["h"]
+
+
+def _carry_out(cfg: "ModelConfig", carry) -> PyTree:
+    if cfg.rnn_cell == "lstm":
+        return {"h": carry[0], "c": carry[1]}
+    return {"h": carry}
+
+
+def recurrent_prefill(p: PyTree, cfg: "ModelConfig", u: jnp.ndarray,
+                      state: PyTree | None = None):
+    """u: [B, T, D] → (y [B, T, D], state).  Resumes from ``state`` if given."""
+    carry0 = None if state is None else _carry_in(cfg, state)
+    if cfg.use_pallas and cfg.rnn_cell == "lstm":
+        from repro.kernels.lstm_cell import ops as lstm_ops
+
+        c = p["cell"]
+        h0c0 = (None, None) if carry0 is None else carry0
+        y, h_f, c_f = lstm_ops.lstm_seq(
+            u.astype(jnp.float32), c["w_x"].astype(jnp.float32),
+            c["w_h"].astype(jnp.float32), c["b"].astype(jnp.float32),
+            h0=h0c0[0], c0=h0c0[1],
+        )
+        carry = (h_f, c_f)
+    else:
+        y, carry = cells.cell_seq(cfg.rnn_cell, p["cell"], u, carry0,
+                                  unroll=cfg.scan_unroll)
+    out = y.astype(u.dtype) @ p["w_out"]
+    return out, _carry_out(cfg, carry)
+
+
+def recurrent_decode(p: PyTree, cfg: "ModelConfig", u_t: jnp.ndarray, state: PyTree):
+    """One token: u_t [B, 1, D] → (y [B, 1, D], state') — the transition map f."""
+    carry = _carry_in(cfg, state)
+    if cfg.rnn_cell == "lstm":
+        h_new, c_new = cells.lstm_step(p["cell"], carry, u_t[:, 0])
+        carry = (h_new, c_new)
+    else:
+        h_new = cells.gru_step(p["cell"], carry, u_t[:, 0])
+        carry = h_new
+    y = (h_new.astype(u_t.dtype) @ p["w_out"])[:, None]
+    return y, _carry_out(cfg, carry)

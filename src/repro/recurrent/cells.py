@@ -1,0 +1,178 @@
+"""LSTM / GRU cells as state-space systems (paper §I: "such as long
+short-term memory (LSTM) NNs, which have intrinsic state-space forms").
+
+A recurrent cell IS the paper's eq. (1) with shared per-step parameters:
+
+    x[k+1] = f(x[k], u[k])     x = (h, c) for LSTM, x = h for GRU
+    y[k]   = g(x[k], u[k])     Mealy output: y[k] = h[k+1] depends on u[k]
+
+The weights are the same at every step — on the FPGA this is the shared
+datapath whose coefficient ROM never pages (one physical cell, T
+time-multiplexed uses); here the cell factories close over the parameter
+pytree and the resulting :class:`StateSpaceModel` runs through the existing
+``run_scan`` / ``cslow_vectorized`` machinery unchanged.  ``g`` recomputes
+the gate pre-activations ``f`` already formed; XLA CSEs the duplicate inside
+the shared scan body, keeping the jaxpr honest and the HLO minimal.
+
+Gate conventions
+----------------
+LSTM (order i, f, g, o along the fused 4H axis; forget bias +1):
+    z = [u, h] @ W + b                     W: [D+H, 4H] — ONE contraction
+    c' = sigmoid(z_f) * c + sigmoid(z_i) * tanh(z_g)
+    h' = sigmoid(z_o) * tanh(c')
+GRU (order r, z, n along 3H; candidate uses a separate hidden bias so the
+reset gate acts inside the tanh, torch-style):
+    r = sigmoid(u@Wx_r + h@Wh_r + b_r);  z = sigmoid(...)
+    n = tanh(u@Wx_n + b_n + r * (h@Wh_n + bh_n))
+    h' = (1 - z) * n + z * h
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state_space import StateSpaceModel, run_scan
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# parameter construction
+# ---------------------------------------------------------------------------
+
+def lstm_params(key, d_in: int, hidden: int, dtype=jnp.float32) -> PyTree:
+    """Fused-gate LSTM parameters: one [D, 4H] input and [H, 4H] hidden map."""
+    kx, kh = jax.random.split(key)
+    b = np.zeros((4 * hidden,), np.float32)
+    b[hidden : 2 * hidden] = 1.0  # forget-gate bias: remember by default
+    return {
+        "w_x": (jax.random.normal(kx, (d_in, 4 * hidden)) / np.sqrt(d_in)).astype(dtype),
+        "w_h": (jax.random.normal(kh, (hidden, 4 * hidden)) / np.sqrt(hidden)).astype(dtype),
+        "b": jnp.asarray(b, dtype),
+    }
+
+
+def gru_params(key, d_in: int, hidden: int, dtype=jnp.float32) -> PyTree:
+    kx, kh = jax.random.split(key)
+    return {
+        "w_x": (jax.random.normal(kx, (d_in, 3 * hidden)) / np.sqrt(d_in)).astype(dtype),
+        "w_h": (jax.random.normal(kh, (hidden, 3 * hidden)) / np.sqrt(hidden)).astype(dtype),
+        "b": jnp.zeros((3 * hidden,), dtype),
+        "bh_n": jnp.zeros((hidden,), dtype),  # hidden bias of the candidate
+    }
+
+
+def cell_hidden_size(params: PyTree, cell: str) -> int:
+    div = 4 if cell == "lstm" else 3
+    return params["w_x"].shape[-1] // div
+
+
+# ---------------------------------------------------------------------------
+# single-step transition maps (batched over any leading dims)
+# ---------------------------------------------------------------------------
+
+def lstm_step(params: PyTree, carry, u):
+    """(h, c), u -> (h', c').  All in f32 (the state registers are exact)."""
+    h, c = carry
+    H = h.shape[-1]
+    z = (
+        u.astype(jnp.float32) @ params["w_x"].astype(jnp.float32)
+        + h @ params["w_h"].astype(jnp.float32)
+        + params["b"].astype(jnp.float32)
+    )
+    i_g = jax.nn.sigmoid(z[..., :H])
+    f_g = jax.nn.sigmoid(z[..., H : 2 * H])
+    g_g = jnp.tanh(z[..., 2 * H : 3 * H])
+    o_g = jax.nn.sigmoid(z[..., 3 * H :])
+    c_new = f_g * c + i_g * g_g
+    h_new = o_g * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def gru_step(params: PyTree, h, u):
+    """h, u -> h'."""
+    H = h.shape[-1]
+    zx = u.astype(jnp.float32) @ params["w_x"].astype(jnp.float32) + params["b"].astype(jnp.float32)
+    zh = h @ params["w_h"].astype(jnp.float32)
+    r = jax.nn.sigmoid(zx[..., :H] + zh[..., :H])
+    z = jax.nn.sigmoid(zx[..., H : 2 * H] + zh[..., H : 2 * H])
+    n = jnp.tanh(zx[..., 2 * H :] + r * (zh[..., 2 * H :] + params["bh_n"].astype(jnp.float32)))
+    return (1.0 - z) * n + z * h
+
+
+# ---------------------------------------------------------------------------
+# StateSpaceModel factories (the paper-form view)
+# ---------------------------------------------------------------------------
+
+def lstm_cell(params: PyTree) -> StateSpaceModel:
+    """LSTM as ``StateSpaceModel``: state (h, c), Mealy output y[k] = h[k+1]."""
+
+    def f(params_k, carry, u, k):
+        del params_k, k
+        return lstm_step(params, carry, u)
+
+    def g(params_k, carry, u, k):
+        del params_k, k
+        h_new, _ = lstm_step(params, carry, u)  # CSE'd against f in the body
+        return h_new
+
+    return StateSpaceModel(f=f, g=g, output_mode="mealy")
+
+
+def gru_cell(params: PyTree) -> StateSpaceModel:
+    """GRU as ``StateSpaceModel``: state h, Mealy output y[k] = h[k+1]."""
+
+    def f(params_k, h, u, k):
+        del params_k, k
+        return gru_step(params, h, u)
+
+    def g(params_k, h, u, k):
+        del params_k, k
+        return gru_step(params, h, u)
+
+    return StateSpaceModel(f=f, g=g, output_mode="mealy")
+
+
+def make_cell(cell: str, params: PyTree) -> StateSpaceModel:
+    if cell == "lstm":
+        return lstm_cell(params)
+    if cell == "gru":
+        return gru_cell(params)
+    raise ValueError(f"unknown recurrent cell '{cell}' (lstm|gru)")
+
+
+def init_carry(cell: str, params: PyTree, batch_shape: tuple[int, ...] = ()):
+    H = cell_hidden_size(params, cell)
+    h = jnp.zeros(batch_shape + (H,), jnp.float32)
+    return (h, jnp.zeros_like(h)) if cell == "lstm" else h
+
+
+# ---------------------------------------------------------------------------
+# sequence execution through the shared state-space machinery
+# ---------------------------------------------------------------------------
+
+def run_cell(cell: str, params: PyTree, us: jnp.ndarray, carry0=None, *,
+             unroll: int = 1):
+    """Run a cell over a time-major input ``us: [T, ..., D]``.
+
+    Returns (final_carry, ys [T, ..., H]) — literally
+    ``run_scan(make_cell(...), None, x0, us)``: the cell's weights ride in
+    the closure (constant ROM), so ``stacked_params`` is None and the scan
+    body is the paper's one shared datapath.  ``unroll`` is the j knob.
+    """
+    if carry0 is None:
+        carry0 = init_carry(cell, params, us.shape[1:-1])
+    model = make_cell(cell, params)
+    return run_scan(model, None, carry0, us, length=us.shape[0], unroll=unroll)
+
+
+def cell_seq(cell: str, params: PyTree, x: jnp.ndarray, carry0=None, *,
+             unroll: int = 1):
+    """Batch-major convenience: x [B, T, D] -> (y [B, T, H], final_carry)."""
+    us = jnp.moveaxis(x, 1, 0)                      # [T, B, D]
+    carry, ys = run_cell(cell, params, us, carry0, unroll=unroll)
+    return jnp.moveaxis(ys, 0, 1), carry

@@ -29,7 +29,10 @@ def splice_cache(caches: PyTree, prefill_caches: PyTree, b: int, plen: int) -> P
 
     Handles: full-length KV ([G,1,L,..] → [G,B,S_max,..] left-aligned), MLA
     latents, sliding-window ring buffers (last W positions placed at
-    slot = pos mod W), and SSM states ([G,1,..] → batch row b).
+    slot = pos mod W), and recurrent states — both SSM ``h``/``conv`` and
+    LSTM/GRU ``(h, c)`` carries ([G,1,..] → batch row b): a recurrent carry
+    has no sequence axis, so admission is a pure batch-row write and new
+    requests never disturb other slots' streams.
     """
 
     def one(path, dst, src):

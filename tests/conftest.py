@@ -11,6 +11,10 @@ import pytest
 
 jax.config.update("jax_default_matmul_precision", "highest")
 
+# Graceful degradation on minimal environments: property-test modules start
+# with ``pytest.importorskip("hypothesis")`` so a missing optional dep reports
+# as a skip, not a collection error.  Full dev deps: requirements.txt.
+
 
 @pytest.fixture
 def rng():

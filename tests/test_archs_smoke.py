@@ -81,6 +81,8 @@ def test_smoke_decode_matches_prefill(arch, key):
 
 
 def test_arch_shape_matrix_counts():
-    """32 runnable cells out of the nominal 40 (documented skips)."""
+    """32 runnable cells out of the nominal 40 for the ten assigned archs
+    (documented skips), + 4 for paper-lstm (recurrent: all decoder shapes
+    incl. long-context — the O(1) carry is sub-quadratic)."""
     total = sum(len(applicable_shapes(get_config(a))) for a in ARCH_IDS)
-    assert total == 32
+    assert total == 36

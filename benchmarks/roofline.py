@@ -23,7 +23,7 @@ import glob
 import json
 import os
 
-from repro.configs import ARCH_IDS, get_config
+from repro.configs import get_config
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 from repro.models.config import ALL_SHAPES, ModelConfig
 

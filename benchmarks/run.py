@@ -9,6 +9,7 @@ CSVs under ``experiments/``.
   fig3   — j-step Φ pipelining (paper Fig. 3)
   fig5   — C-slow retiming (paper Fig. 5)
   lstm   — recurrent-cell throughput (unroll/C-slow sweeps + fused kernel)
+  codegen— generated-vs-handwritten-vs-XLA kernel throughput (PR 2)
   kernels— kernel reference micro-benches
   int8   — weight-only int8 serving comparison
   roofline — §Roofline terms from the dry-run artifacts
@@ -17,19 +18,19 @@ CSVs under ``experiments/``.
 from __future__ import annotations
 
 import argparse
-import sys
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
-                    help="subset: fig11 fig10 table1 fig3 fig5 lstm kernels int8 roofline")
+                    help="subset: fig11 fig10 table1 fig3 fig5 lstm codegen "
+                         "kernels int8 roofline")
     ap.add_argument("--out", default="experiments")
     args = ap.parse_args()
 
-    from . import (fig3_jstep, fig5_cslow, fig10_generator, fig11_snr,
-                   int8_serving, kernels_bench, lstm_throughput, roofline,
-                   table1_api)
+    from . import (codegen_bench, fig3_jstep, fig5_cslow, fig10_generator,
+                   fig11_snr, int8_serving, kernels_bench, lstm_throughput,
+                   roofline, table1_api)
 
     benches = {
         "fig11": lambda: fig11_snr.run(args.out),
@@ -38,6 +39,7 @@ def main() -> None:
         "fig3": lambda: fig3_jstep.run(args.out),
         "fig5": lambda: fig5_cslow.run(args.out),
         "lstm": lambda: lstm_throughput.run(args.out),
+        "codegen": lambda: codegen_bench.run(args.out),
         "kernels": lambda: kernels_bench.run(args.out),
         "int8": lambda: int8_serving.run(args.out),
         "roofline": lambda: roofline.run(args.out),

@@ -13,11 +13,9 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import lm
-from repro.models.config import ModelConfig
 
 
 def state_bytes(tree) -> int:

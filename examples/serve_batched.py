@@ -24,9 +24,16 @@ def main() -> None:
     ap.add_argument("--max-seq", type=int, default=96)
     ap.add_argument("--int8", action="store_true",
                     help="weight-only int8 serving (paper's fixed-point stage)")
+    ap.add_argument("--codegen", action="store_true",
+                    help="route recurrent prefill through the generated "
+                         "fused cell kernel (repro.codegen fast path)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
+    if args.codegen:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, use_codegen=True)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     if args.int8:
         from repro.runtime.quantized import dequantize_lm_params, quantize_lm_params

@@ -1,0 +1,76 @@
+"""State-space code generation: spec → scheduled FSM/datapath IR → backends.
+
+The paper's headline artifact is a code *generator* (hyper-parameters →
+synthesizable Verilog).  This subsystem is that generator with an explicit
+IR in the middle:
+
+    NetworkSpec ──build_program──▶ Program (FSM schedule + datapath graph)
+                                      │
+              ┌───────────────────────┼─────────────────────────┐
+        xla_backend             pallas_backend              verilog
+     (lax.scan datapath)   (ONE generated fused kernel)  (Table-I RTL text)
+
+``register_cell`` adds a new cell type once; all three backends pick it up.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+from .builders import (
+    CELL_GRAPHS,
+    bind_cell_params,
+    build_program,
+    cell_stage_runner,
+    register_cell,
+    registered_cells,
+    ssm_params,
+)
+from .ir import DatapathGraph, GraphBuilder, Node, Program, Schedule, Stage, eval_graph
+from .verilog import ResourceReport, emit_program, report_program
+from . import pallas_backend, verilog, xla_backend
+
+BACKENDS = ("xla", "pallas", "verilog")
+
+
+def compile_spec(spec: Any, backend: str = "xla", *, interpret: bool | None = None):
+    """spec → (params, batched forward) through the chosen backend.
+
+    ``forward(params, u)`` expects a leading batch axis (and a leading
+    stream axis before it when ``spec.c_slow > 1``): mlp ``u [B, L]``,
+    recurrent cells ``u [B, T, D]``; returns ``y [B, num_outputs]``.
+    """
+    program = build_program(spec)
+    if backend == "xla":
+        return program.params, xla_backend.compile_program(program)
+    if backend == "pallas":
+        return program.params, pallas_backend.compile_program(
+            program, interpret=interpret)
+    raise ValueError(f"unknown executable backend '{backend}' (xla|pallas); "
+                     "use emit_program() / synthesize(backend='verilog') for RTL")
+
+
+__all__ = [
+    "BACKENDS",
+    "CELL_GRAPHS",
+    "DatapathGraph",
+    "GraphBuilder",
+    "Node",
+    "Program",
+    "ResourceReport",
+    "Schedule",
+    "Stage",
+    "bind_cell_params",
+    "build_program",
+    "cell_stage_runner",
+    "compile_spec",
+    "emit_program",
+    "eval_graph",
+    "pallas_backend",
+    "register_cell",
+    "registered_cells",
+    "report_program",
+    "ssm_params",
+    "verilog",
+    "xla_backend",
+]

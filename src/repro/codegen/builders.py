@@ -1,0 +1,273 @@
+"""NetworkSpec / cell → IR builders, with a registry for new cell types.
+
+Each cell registers a builder ``spec -> Program``; ``build_program`` is the
+front of the generator.  The datapath graphs here ARE the Table-I wiring
+diagrams: the LSTM graph is literally the fused-gate structure the
+hand-written ``kernels/lstm_cell`` implements (one concatenated [D+H, 4H]
+MACC feeding four gate slices), which is what lets the Pallas backend emit
+an equivalent fused kernel for *any* registered cell.
+
+Parameter initialization deliberately reuses the Table-I constructors
+(``synthesis.create_layer*``, ``recurrent.cells.*_params``) with the same
+key schedule as ``create_top_module``, so the IR path and the legacy path
+are bit-identical given the same spec.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, TYPE_CHECKING
+
+import jax
+import jax.numpy as jnp
+
+from repro.recurrent import cells as rnn_cells
+
+from .ir import DatapathGraph, GraphBuilder, Program, Schedule, Stage
+
+if TYPE_CHECKING:  # import cycle: synthesis imports codegen for its backends
+    from repro.core.synthesis import NetworkSpec
+
+PyTree = Any
+
+CELL_BUILDERS: Dict[str, Callable[["NetworkSpec"], Program]] = {}
+
+
+def register_cell(name: str):
+    """Register a ``spec -> Program`` builder for a new cell type; it is
+    immediately synthesizable on every backend (XLA / Pallas / Verilog)."""
+
+    def deco(fn):
+        CELL_BUILDERS[name] = fn
+        return fn
+
+    return deco
+
+
+def registered_cells() -> list[str]:
+    return sorted(CELL_BUILDERS)
+
+
+def build_program(spec: "NetworkSpec") -> Program:
+    try:
+        builder = CELL_BUILDERS[spec.cell]
+    except KeyError:
+        raise ValueError(
+            f"no codegen builder for cell '{spec.cell}'; "
+            f"registered: {registered_cells()}"
+        ) from None
+    if spec.cell != "mlp" and spec.seq_len <= 0:
+        raise ValueError(f"recurrent spec '{spec.cell}' requires seq_len > 0")
+    prog = builder(spec)
+    prog.validate()
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Cell graphs (shape-only — params bound separately so the recurrent block
+# can reuse them with already-trained weights)
+# ---------------------------------------------------------------------------
+
+def mlp_graph(nodes: int, activation: str) -> DatapathGraph:
+    """Paper eq. 8: x[k+1] = af(W[k] x[k] + b[k]); layers are the time axis,
+    so W/b are per-step ROM pages."""
+    g = GraphBuilder()
+    x = g.state("x", nodes)
+    W = g.const("W", (nodes, nodes), per_step=True)
+    b = g.const("b", (1, nodes), per_step=True)
+    z = g.macc("z", x, W, b)
+    g.update("x", g.af("x_next", z, activation))
+    return g.build(output=None)  # Moore: read out only at k = N
+
+
+def lstm_graph(d_in: int, hidden: int) -> DatapathGraph:
+    """The fused-gate LSTM datapath (same math as ``cells.lstm_step``)."""
+    H = hidden
+    g = GraphBuilder()
+    u = g.input("u", d_in)
+    h = g.state("h", H)
+    c = g.state("c", H)
+    xu = g.concat("xu", u, h)
+    W = g.const("W", (d_in + H, 4 * H))
+    b = g.const("b", (1, 4 * H))
+    z = g.macc("z", xu, W, b)
+    i_g = g.af("i_gate", g.slice("z_i", z, 0, H), "sigmoid")
+    f_g = g.af("f_gate", g.slice("z_f", z, H, 2 * H), "sigmoid")
+    g_g = g.af("g_gate", g.slice("z_g", z, 2 * H, 3 * H), "tanh")
+    o_g = g.af("o_gate", g.slice("z_o", z, 3 * H, 4 * H), "sigmoid")
+    c_new = g.add("c_next", g.mul("fc", f_g, c), g.mul("ig", i_g, g_g))
+    h_new = g.mul("h_next", o_g, g.af("c_tanh", c_new, "tanh"))
+    g.update("h", h_new)
+    g.update("c", c_new)
+    return g.build(output=h_new)
+
+
+def gru_graph(d_in: int, hidden: int) -> DatapathGraph:
+    """GRU with the torch-style candidate (reset gate inside the tanh).
+    ``h' = n + z·(h − n)`` is the gate-count-minimal form of
+    ``(1−z)·n + z·h``."""
+    H = hidden
+    g = GraphBuilder()
+    u = g.input("u", d_in)
+    h = g.state("h", H)
+    Wx = g.const("w_x", (d_in, 3 * H))
+    Wh = g.const("w_h", (H, 3 * H))
+    b = g.const("b", (1, 3 * H))
+    bhn = g.const("bh_n", (1, H))
+    zx = g.macc("zx", u, Wx, b)
+    zh = g.macc("zh", h, Wh)
+    r = g.af("r_gate", g.add("r_pre", g.slice("zx_r", zx, 0, H),
+                             g.slice("zh_r", zh, 0, H)), "sigmoid")
+    z = g.af("z_gate", g.add("z_pre", g.slice("zx_z", zx, H, 2 * H),
+                             g.slice("zh_z", zh, H, 2 * H)), "sigmoid")
+    nh = g.add("n_hid", g.slice("zh_n", zh, 2 * H, 3 * H), bhn)
+    n = g.af("n_cand", g.add("n_pre", g.slice("zx_n", zx, 2 * H, 3 * H),
+                             g.mul("rn", r, nh)), "tanh")
+    h_new = g.add("h_next", n, g.mul("zd", z, g.sub("hn", h, n)))
+    g.update("h", h_new)
+    return g.build(output=h_new)
+
+
+def ssm_graph(d_in: int, hidden: int) -> DatapathGraph:
+    """Diagonal linear SSM: h' = a ⊙ h + (u W_in + b) — the paper's eq. 4
+    with drive, the cell the ``ssm_scan`` kernel family serves."""
+    g = GraphBuilder()
+    u = g.input("u", d_in)
+    h = g.state("h", hidden)
+    a = g.const("a", (1, hidden))
+    Win = g.const("w_in", (d_in, hidden))
+    b = g.const("b", (1, hidden))
+    drive = g.macc("drive", u, Win, b)
+    h_new = g.add("h_next", g.mul("ah", a, h), drive)
+    g.update("h", h_new)
+    return g.build(output=h_new)
+
+
+CELL_GRAPHS: Dict[str, Callable[[int, int], DatapathGraph]] = {
+    "lstm": lstm_graph,
+    "gru": gru_graph,
+    "ssm": ssm_graph,
+}
+
+
+# ---------------------------------------------------------------------------
+# Binding trained cell parameters to graph consts (block.py fast path)
+# ---------------------------------------------------------------------------
+
+def bind_cell_params(cell: str, params: PyTree) -> dict[str, jnp.ndarray]:
+    """Map a ``recurrent.cells``-layout parameter pytree onto the graph's
+    const names (f32, ``v @ W`` orientation)."""
+    f32 = lambda t: jnp.asarray(t, jnp.float32)
+    if cell == "lstm":
+        return {
+            "W": jnp.concatenate([f32(params["w_x"]), f32(params["w_h"])], axis=0),
+            "b": f32(params["b"])[None],
+        }
+    if cell == "gru":
+        return {
+            "w_x": f32(params["w_x"]),
+            "w_h": f32(params["w_h"]),
+            "b": f32(params["b"])[None],
+            "bh_n": f32(params["bh_n"])[None],
+        }
+    if cell == "ssm":
+        return {
+            "a": f32(params["a"])[None],
+            "w_in": f32(params["w_in"]),
+            "b": f32(params["b"])[None],
+        }
+    raise ValueError(f"no const binding for cell '{cell}'")
+
+
+def ssm_params(key, d_in: int, hidden: int, dtype=jnp.float32) -> PyTree:
+    """Stable diagonal-SSM parameters: decays in (0.5, 0.95)."""
+    ka, kw = jax.random.split(key)
+    a = 0.5 + 0.45 * jax.random.uniform(ka, (hidden,))
+    w = jax.random.normal(kw, (d_in, hidden)) / jnp.sqrt(d_in)
+    return {"a": a.astype(dtype), "w_in": w.astype(dtype),
+            "b": jnp.zeros((hidden,), dtype)}
+
+
+_CELL_PARAM_CTORS = {
+    "lstm": rnn_cells.lstm_params,
+    "gru": rnn_cells.gru_params,
+    "ssm": ssm_params,
+}
+
+
+def cell_stage_runner(cell: str, d_in: int, hidden: int, *, jit: bool = True,
+                      **compile_opts):
+    """Generated-kernel runner for ONE bare cell datapath (no readout).
+
+    Returns ``(run, graph)`` where ``run(consts, x0, us)`` is the Pallas
+    stage executor (``consts`` from :func:`bind_cell_params`, ``x0`` a dict
+    of ``[B, width]`` state registers from ``graph.states``, ``us``
+    ``[B, T, d_in]``).  The schedule steps come from ``us`` at call time.
+    Shared by the recurrent block fast path, the codegen benchmark, and
+    tests — one place owns the Stage-assembly recipe.
+    """
+    from . import pallas_backend
+
+    graph = CELL_GRAPHS[cell](d_in, hidden)
+    stage = Stage(name=cell, graph=graph,
+                  schedule=Schedule(steps=1), params={})
+    run = pallas_backend.compile_stage(stage, **compile_opts)
+    return (jax.jit(run) if jit else run), graph
+
+
+# ---------------------------------------------------------------------------
+# Spec-level builders (registry entries)
+# ---------------------------------------------------------------------------
+
+def _spec_schedule(spec: "NetworkSpec") -> Schedule:
+    return (Schedule(steps=spec.serial_steps)
+            .with_unroll(spec.unroll)
+            .with_c_slow(spec.c_slow))
+
+
+@register_cell("mlp")
+def _build_mlp(spec: "NetworkSpec") -> Program:
+    from repro.core.synthesis import create_layer, create_layer1, create_layer_end
+
+    key = jax.random.PRNGKey(spec.seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    beta = create_layer1(spec.num_inputs, spec.nodes_per_layer, k1)
+    W, b = create_layer(spec.nodes_per_layer, spec.num_hidden_layers, k2)
+    C = create_layer_end(spec.nodes_per_layer, spec.num_outputs, k3)
+    graph = mlp_graph(spec.nodes_per_layer, spec.activation)
+    stage = Stage(
+        name="hidden",
+        graph=graph,
+        schedule=_spec_schedule(spec),
+        # stored in v @ W orientation: W_std @ x == x @ W_stdᵀ
+        params={"W": jnp.swapaxes(W, -1, -2), "b": b[:, None, :]},
+    )
+    return Program(spec=spec, stages=[stage], C=C, readout_state="x", beta=beta)
+
+
+def _build_recurrent(spec: "NetworkSpec") -> Program:
+    """Shared lstm/gru/ssm builder: a stack of ``num_hidden_layers`` cell
+    stages over the ``seq_len`` time axis, readout C on the final carry —
+    the same key schedule as ``create_top_module``."""
+    key = jax.random.PRNGKey(spec.seed)
+    _, k2, k3 = jax.random.split(key, 3)
+    from repro.core.synthesis import create_layer_end
+
+    ctor = _CELL_PARAM_CTORS[spec.cell]
+    graph_fn = CELL_GRAPHS[spec.cell]
+    layer_keys = jax.random.split(k2, spec.num_hidden_layers)
+    stages = []
+    for i in range(spec.num_hidden_layers):
+        d_in = spec.num_inputs if i == 0 else spec.nodes_per_layer
+        cell_p = ctor(layer_keys[i], d_in, spec.nodes_per_layer)
+        stages.append(Stage(
+            name=f"layer{i}",
+            graph=graph_fn(d_in, spec.nodes_per_layer),
+            schedule=_spec_schedule(spec),
+            params=bind_cell_params(spec.cell, cell_p),
+        ))
+    C = create_layer_end(spec.nodes_per_layer, spec.num_outputs, k3)
+    return Program(spec=spec, stages=stages, C=C, readout_state="h")
+
+
+for _cell in ("lstm", "gru", "ssm"):
+    register_cell(_cell)(_build_recurrent)

@@ -1,0 +1,248 @@
+"""Pallas backend: IR → ONE generated fused scan-step kernel.
+
+Generalizes the hand-written ``kernels/lstm_cell`` pattern to any datapath
+graph: grid ``(B/bb, T/ct)`` with the batch axis parallel and the chunk
+axis sequential; every state register is a VMEM scratch that persists
+across chunks (the paper's eq. 1 state register, never spilled to HBM
+between chunks); within a chunk the ``ct`` steps are a static unroll (the
+j knob); the graph is evaluated per step by the SAME ``ir.eval_graph`` the
+XLA backend uses — macc nodes hit the MXU, gate algebra the VPU.
+
+Const ROMs: shared consts are resident whole; per-step consts (the MLP's
+stacked W[k] pages) stream in chunk-sized blocks via their BlockSpec.
+
+Quantized path (paper §IV-B): ``lut`` switches tanh/sigmoid to the shared
+ROM-LUT idiom of ``kernels/_lut`` (one-hot × table MXU contractions with
+linear interpolation; σ(x) = (1 + tanh(x/2))/2 reuses the same table).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.state_space import ACTIVATIONS
+from repro.kernels._compat import CompilerParams
+from repro.kernels._lut import lut_interpolate, shifted_table
+
+from .ir import Program, Stage, eval_graph
+
+PyTree = Any
+
+DEFAULT_CHUNK = 32
+DEFAULT_BLOCK_B = 8
+
+# Tests force interpret mode (CPU container); TPU deployments flip to False —
+# same convention as the hand-written kernels' ops.py.
+INTERPRET = True
+
+
+def _act_resolver(lut_refs, n_lut: int) -> Callable:
+    """Activation resolver for kernel bodies: LUT tanh/sigmoid when a table
+    is loaded, VPU transcendentals otherwise."""
+    if n_lut:
+        lut = lut_refs[0][0, :]
+        lut1 = lut_refs[1][0, :]
+        tanh = lambda v: lut_interpolate(v, lut, lut1, n_lut)
+    else:
+        tanh = jnp.tanh
+    sig = lambda v: 0.5 * (1.0 + tanh(0.5 * v))
+    table = dict(ACTIVATIONS)
+    table["tanh"] = tanh
+    table["sigmoid"] = sig
+
+    def act(fn: str):
+        return table[fn]
+
+    return act
+
+
+def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
+                  block_b: int = DEFAULT_BLOCK_B,
+                  interpret: bool | None = None) -> Callable:
+    """Generate the fused kernel for one scheduled datapath.
+
+    Returns ``run(consts, x0, us) -> (final_states, ys)`` with ``x0`` leaves
+    ``[B, width]`` and ``us`` ``[B, T, D]`` (None for autonomous graphs).
+    """
+    graph, sched = stage.graph, stage.schedule
+    state_names = sorted(graph.states)
+    per_step = [n.name for n in graph.consts(per_step=True)]
+    shared_names = [n.name for n in graph.consts(per_step=False)]
+    inp = graph.input_node()
+    has_out = graph.output is not None
+    out_width = graph.node(graph.output).width if has_out else 0
+    n_state = len(state_names)
+    n_lut = 0 if lut is None else int(lut.shape[0])
+    itp = INTERPRET if interpret is None else interpret
+
+    def kernel(*refs, ct: int, last_chunk: int):
+        i = 0
+        x_ref = refs[i] if inp is not None else None
+        i += 1 if inp is not None else 0
+        ps_refs = {name: refs[i + j] for j, name in enumerate(per_step)}
+        i += len(per_step)
+        sh_refs = {name: refs[i + j] for j, name in enumerate(shared_names)}
+        i += len(shared_names)
+        s0_refs = {name: refs[i + j] for j, name in enumerate(state_names)}
+        i += n_state
+        lut_refs = refs[i: i + (2 if n_lut else 0)]
+        i += 2 if n_lut else 0
+        y_ref = refs[i] if has_out else None
+        i += 1 if has_out else 0
+        fin_refs = {name: refs[i + j] for j, name in enumerate(state_names)}
+        i += n_state
+        scr = {name: refs[i + j] for j, name in enumerate(state_names)}
+
+        ci = pl.program_id(1)
+
+        @pl.when(ci == 0)
+        def _init():
+            for name in state_names:
+                scr[name][...] = s0_refs[name][...].astype(jnp.float32)
+
+        act = _act_resolver(lut_refs, n_lut)
+        shared_vals = {name: sh_refs[name][...] for name in shared_names}
+        states = {name: scr[name][...] for name in state_names}
+
+        ys = []
+        for t in range(ct):  # static unroll within the chunk — the j knob
+            u_t = x_ref[:, t, :].astype(jnp.float32) if inp is not None else None
+
+            def consts_get(name, t=t):
+                if name in ps_refs:
+                    return ps_refs[name][t]
+                return shared_vals[name]
+
+            states, y = eval_graph(graph, consts=consts_get, states=states,
+                                   u=u_t, act=act)
+            if has_out:
+                ys.append(y)
+
+        for name in state_names:
+            scr[name][...] = states[name]
+        if has_out:
+            y_ref[...] = jnp.stack(ys, axis=1).astype(y_ref.dtype)
+
+        @pl.when(ci == last_chunk)
+        def _fin():
+            for name in state_names:
+                fin_refs[name][...] = states[name]
+
+    def run(consts: dict, x0: dict, us):
+        B = x0[state_names[0]].shape[0]
+        T = us.shape[1] if us is not None else sched.steps
+        ct = min(max(chunk, sched.unroll), T)
+        while T % ct:
+            ct //= 2
+        bb = min(block_b, B)
+        while B % bb:
+            bb //= 2
+
+        in_specs, operands = [], []
+        if inp is not None:
+            D = inp.width
+            in_specs.append(pl.BlockSpec((bb, ct, D), lambda i, c: (i, c, 0)))
+            operands.append(jnp.asarray(us, jnp.float32))
+        for name in per_step:
+            arr = jnp.asarray(consts[name], jnp.float32)  # [T, ...]
+            tail = arr.shape[1:]
+            in_specs.append(pl.BlockSpec(
+                (ct,) + tail, lambda i, c, nd=len(tail): (c,) + (0,) * nd))
+            operands.append(arr)
+        for name in shared_names:
+            arr = jnp.asarray(consts[name], jnp.float32)
+            in_specs.append(pl.BlockSpec(
+                arr.shape, lambda i, c, nd=arr.ndim: (0,) * nd))
+            operands.append(arr)
+        for name in state_names:
+            w = graph.states[name]
+            in_specs.append(pl.BlockSpec((bb, w), lambda i, c: (i, 0)))
+            operands.append(jnp.asarray(x0[name], jnp.float32))
+        if n_lut:
+            lut1 = shifted_table(lut)
+            in_specs += [pl.BlockSpec((1, n_lut), lambda i, c: (0, 0))] * 2
+            operands += [jnp.asarray(lut, jnp.float32)[None],
+                         jnp.asarray(lut1, jnp.float32)[None]]
+
+        out_specs, out_shape = [], []
+        if has_out:
+            out_specs.append(pl.BlockSpec((bb, ct, out_width),
+                                          lambda i, c: (i, c, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((B, T, out_width), jnp.float32))
+        for name in state_names:
+            w = graph.states[name]
+            out_specs.append(pl.BlockSpec((bb, w), lambda i, c: (i, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((B, w), jnp.float32))
+
+        results = pl.pallas_call(
+            functools.partial(kernel, ct=ct, last_chunk=T // ct - 1),
+            grid=(B // bb, T // ct),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.VMEM((bb, graph.states[n]), jnp.float32)
+                            for n in state_names],
+            compiler_params=CompilerParams(
+                dimension_semantics=("parallel", "arbitrary")
+            ),
+            interpret=itp,
+        )(*operands)
+
+        o = 0
+        ys = None
+        if has_out:
+            ys, o = results[0], 1
+        finals = {name: results[o + j] for j, name in enumerate(state_names)}
+        return finals, ys
+
+    return run
+
+
+def compile_program(program: Program, *, lut=None,
+                    chunk: int = DEFAULT_CHUNK, block_b: int = DEFAULT_BLOCK_B,
+                    interpret: bool | None = None) -> Callable:
+    """IR → batched forward through generated fused kernels — the same
+    signature as :func:`xla_backend.compile_program`.
+
+    ``c_slow = C > 1`` folds the stream axis into the batch grid axis: the
+    kernel's batch dimension IS the C-slow interleave (C independent streams
+    marching through one datapath — see ``kernels/lstm_cell``'s docstring).
+    """
+    program.validate()
+    runners = [compile_stage(st, lut=lut, chunk=chunk, block_b=block_b,
+                             interpret=interpret) for st in program.stages]
+    is_mlp = program.beta is not None
+    readout = program.readout_state
+    c_slow = program.stages[0].schedule.c_slow
+
+    def forward(params: PyTree, u: jnp.ndarray) -> jnp.ndarray:
+        u = jnp.asarray(u, jnp.float32)
+        lead = u.shape[: 2 if c_slow > 1 else 1]
+        if c_slow > 1:  # [C, B, ...] -> [(C·B), ...]: batch-axis interleave
+            u = u.reshape((lead[0] * lead[1],) + u.shape[2:])
+        C = jnp.asarray(params["C"], jnp.float32)
+        sp = params["stages"]
+        if is_mlp:
+            x0 = {"x": u @ jnp.asarray(params["beta"], jnp.float32).T}
+            finals, _ = runners[0](sp[0], x0, None)
+            y = finals["x"] @ C.T
+        else:
+            ys = u
+            finals = None
+            for stage, run, p in zip(program.stages, runners, sp):
+                B = ys.shape[0]
+                x0 = {name: jnp.zeros((B, w), jnp.float32)
+                      for name, w in stage.graph.states.items()}
+                finals, ys = run(p, x0, ys)
+            y = finals[readout] @ C.T
+        if c_slow > 1:
+            y = y.reshape(lead + y.shape[1:])
+        return y
+
+    return forward

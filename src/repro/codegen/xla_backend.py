@@ -1,0 +1,114 @@
+"""XLA backend: IR → ``StateSpaceModel`` → ``lax.scan`` (the baseline flow).
+
+The datapath graph becomes the scan body (one compiled datapath,
+time-multiplexed by the carry — the paper's §IV-A architecture); per-step
+const ROMs ride as ``run_scan``'s stacked params, and the two scheduling
+transforms lower exactly as in the core: ``unroll`` → ``scan(unroll=j)``,
+``c_slow`` → C interleaved streams through :func:`cslow_vectorized`.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax.numpy as jnp
+
+from repro.core.cslow import cslow_vectorized
+from repro.core.state_space import StateSpaceModel, resolve_activation, run_scan
+
+from .ir import DatapathGraph, Program, Stage, eval_graph
+
+PyTree = Any
+
+
+def graph_model(graph: DatapathGraph, shared: dict[str, jnp.ndarray]) -> StateSpaceModel:
+    """Wrap a datapath graph as a ``StateSpaceModel``: the state dict is the
+    carry, per-step consts arrive as ``params_k``.  Moore when the graph has
+    no per-step output (MLP readout happens after the last step)."""
+
+    def consts_of(params_k):
+        def get(name):
+            if params_k is not None and name in params_k:
+                return jnp.asarray(params_k[name], jnp.float32)
+            return shared[name]
+        return get
+
+    def f(params_k, x, u, k):
+        del k
+        new_states, _ = eval_graph(graph, consts=consts_of(params_k), states=x,
+                                   u=u, act=resolve_activation)
+        return new_states
+
+    def g(params_k, x, u, k):
+        del k
+        new_states, out = eval_graph(graph, consts=consts_of(params_k), states=x,
+                                     u=u, act=resolve_activation)
+        return out if graph.output is not None else new_states
+
+    mode = "mealy" if graph.input_node() is not None else "moore"
+    return StateSpaceModel(f=f, g=g, output_mode=mode)
+
+
+def compile_stage(stage: Stage) -> Callable:
+    """Returns ``run(consts, x0, us) -> (final_states, ys)``.
+
+    ``x0`` leaves are ``[lead..., width]``, ``us`` is ``[lead..., T, D]`` (or
+    None for autonomous graphs).  With ``c_slow = C > 1`` the first leading
+    axis is the C interleaved streams, executed through
+    :func:`cslow_vectorized` (one datapath, C state registers).
+    """
+    graph, sched = stage.graph, stage.schedule
+    per_step = [n.name for n in graph.consts(per_step=True)]
+    shared_names = [n.name for n in graph.consts(per_step=False)]
+
+    def run(consts: dict, x0: dict, us):
+        shared = {k: jnp.asarray(consts[k], jnp.float32) for k in shared_names}
+        stacked = {k: consts[k] for k in per_step} or None
+        model = graph_model(graph, shared)
+        if sched.c_slow > 1:
+            # [C, lead..., T, D] -> per-stream time-major [C, T, lead..., D]
+            us_streams = None if us is None else jnp.moveaxis(us, -2, 1)
+            finals, ys = cslow_vectorized(model, stacked, x0, us_streams,
+                                          unroll=sched.unroll)
+            if graph.output is not None:
+                ys = jnp.moveaxis(ys, 1, -2)
+            return finals, ys if graph.output is not None else None
+        us_tm = None if us is None else jnp.moveaxis(us, -2, 0)
+        finals, ys = run_scan(model, stacked, x0, us_tm, length=sched.steps,
+                              unroll=sched.unroll)
+        if graph.output is None:
+            return finals, None
+        return finals, jnp.moveaxis(ys, 0, -2)
+
+    return run
+
+
+def compile_program(program: Program) -> Callable:
+    """IR → batched forward: ``forward(params, u) -> y``.
+
+    Shapes (B = batch; with ``c_slow = C > 1`` prepend a stream axis C):
+      mlp        u [B, L]     -> y [B, P]
+      recurrent  u [B, T, D]  -> y [B, P]   (readout of the final carry)
+    """
+    program.validate()
+    runners = [compile_stage(st) for st in program.stages]
+    is_mlp = program.beta is not None
+    readout = program.readout_state
+
+    def forward(params: PyTree, u: jnp.ndarray) -> jnp.ndarray:
+        C = jnp.asarray(params["C"], jnp.float32)
+        sp = params["stages"]
+        if is_mlp:
+            x0 = {"x": jnp.asarray(u, jnp.float32) @ jnp.asarray(params["beta"], jnp.float32).T}
+            finals, _ = runners[0](sp[0], x0, None)
+            return finals["x"] @ C.T
+        ys = jnp.asarray(u, jnp.float32)
+        finals = None
+        for stage, run, p in zip(program.stages, runners, sp):
+            lead = ys.shape[:-2]
+            x0 = {name: jnp.zeros(lead + (w,), jnp.float32)
+                  for name, w in stage.graph.states.items()}
+            finals, ys = run(p, x0, ys)
+        return finals[readout] @ C.T
+
+    return forward

@@ -17,7 +17,14 @@ from .transition import (
     stepwise_dense_scan,
 )
 from .cslow import cslow_scan, cslow_vectorized, pipeline_utilization
-from .synthesis import NetworkSpec, SynthesisReport, create_top_module, synthesize
+from .synthesis import (
+    NetworkSpec,
+    SynthesisReport,
+    create_top_module,
+    synthesize,
+    synthesize_cache_clear,
+    synthesize_cache_info,
+)
 from . import quantization
 
 __all__ = [
@@ -40,5 +47,7 @@ __all__ = [
     "SynthesisReport",
     "create_top_module",
     "synthesize",
+    "synthesize_cache_clear",
+    "synthesize_cache_info",
     "quantization",
 ]

@@ -20,7 +20,7 @@ interleave C independent problems through one compiled datapath so the
 
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -90,17 +90,19 @@ def cslow_vectorized(
     stacked_params: PyTree,
     x0_streams: PyTree,
     inputs_streams: PyTree | None,
+    unroll: int = 1,
 ):
     """TPU-native C-slow: vmap the datapath over the C stream axis.
 
     Identical results, C× fewer serial steps — the composition of the paper's
     C-slow idea with a vector datapath.  This is what the framework uses in
-    production (microbatching / batched decode)."""
+    production (microbatching / batched decode).  ``unroll`` is the j knob of
+    the underlying scan — C-slowing and j-step unrolling compose."""
 
     def one_stream(x0, us):
         from .state_space import run_scan
 
-        return run_scan(model, stacked_params, x0, us)
+        return run_scan(model, stacked_params, x0, us, unroll=unroll)
 
     if inputs_streams is None:
         return jax.vmap(lambda x0: one_stream(x0, None))(x0_streams)

@@ -145,9 +145,11 @@ def run_direct(
 ):
     """Fully-unrolled (fully-parallel) execution — the paper's max-area extreme.
 
-    Semantically identical to :func:`run_scan`; used as the equivalence
-    oracle in property tests and as the max-throughput configuration for
-    shallow systems.
+    A true drop-in equivalent of :func:`run_scan`: the per-step outputs are
+    stacked (pytree-aware) along a leading time axis, so
+    ``run_direct(...) == run_scan(...)`` leaf-for-leaf.  Used as the
+    equivalence oracle in property tests and as the max-throughput
+    configuration for shallow systems.
     """
     x = x0
     ys = []
@@ -156,7 +158,8 @@ def run_direct(
         u = None if inputs is None else inputs[k]
         x, y = _step(model, params_list[k], x, u, jnp.asarray(k, jnp.int32))
         ys.append(y)
-    return x, ys
+    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *ys)
+    return x, stacked
 
 
 def linear_system(A_provider: Callable[[Any, Any], jnp.ndarray]) -> StateSpaceModel:

@@ -15,9 +15,12 @@ one-to-one so the correspondence is auditable:
     Create_AF_End     -> create_af_end(...)
     Create_mult       -> create_mult(...)       (MACC unit)
 
-``synthesize()`` is the push-button flow: spec → program → lower → compile →
-report.  ``unroll`` and ``c_slow`` are the user's resource/speed compromise
-(the paper's clk_max/clk_data knob).
+``synthesize()`` is the push-button flow: spec → IR program → lower →
+compile → report, now multi-backend (``backend="xla" | "pallas" |
+"verilog"``): every spec lowers through the :mod:`repro.codegen` FSM/datapath
+IR, so the XLA scan, the generated fused Pallas kernel, and the emitted
+Table-I Verilog all come from the same program.  ``unroll`` and ``c_slow``
+are the user's resource/speed compromise (the paper's clk_max/clk_data knob).
 """
 
 from __future__ import annotations
@@ -168,7 +171,7 @@ def create_top_module(spec: NetworkSpec):
 
 
 # ---------------------------------------------------------------------------
-# synthesize(): the push-button flow + report
+# synthesize(): the push-button multi-backend flow + report
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -182,33 +185,85 @@ class SynthesisReport:
     peak_bytes: int | None
     output_shape: tuple
     serial_depth: int
+    backend: str = "xla"
+    cache_hit: bool = False
+    rtl: str | None = None              # backend="verilog": Table-I RTL text
+    resources: Any = None               # backend="verilog": codegen.ResourceReport
+    quant: dict | None = None           # quant_bits analysis (SNR / LUT mode)
 
     def summary(self) -> str:
+        extra = ""
+        if self.quant is not None:
+            snr = self.quant.get("snr_db")
+            extra += f" q{self.quant['bits']}" + (
+                f"={snr:.1f}dB" if snr is not None else f":{self.quant['mode']}")
+        if self.rtl is not None:
+            extra += f" rtl={len(self.rtl) / 1024:.1f}KiB"
+        if self.cache_hit:
+            extra += " (cached)"
         return (
-            f"[{self.spec.name}] params={self.num_params:,} "
+            f"[{self.spec.name}|{self.backend}] params={self.num_params:,} "
             f"lower={self.trace_lower_s * 1e3:.1f}ms compile={self.compile_s * 1e3:.1f}ms "
             f"hlo={self.hlo_bytes / 1024:.1f}KiB flops={self.flops} "
-            f"peak_bytes={self.peak_bytes} depth={self.serial_depth}"
+            f"peak_bytes={self.peak_bytes} depth={self.serial_depth}{extra}"
         )
 
 
-def synthesize(spec: NetworkSpec, batch: int | None = None) -> SynthesisReport:
-    """spec → program → StableHLO ("RTL") → compile → utilization/timing."""
-    params, forward = create_top_module(spec)
-    fwd = forward
-    if batch is not None:
-        fwd = jax.vmap(forward, in_axes=(None, 0))
-    u_shape = (spec.num_inputs,) if spec.cell == "mlp" else (spec.seq_len, spec.num_inputs)
-    if batch is not None:
-        u_shape = (batch,) + u_shape
-    u = jax.ShapeDtypeStruct(u_shape, jnp.float32)
+# Memoization: Fig. 10-style sweeps re-synthesize identical specs; one trace +
+# compile per (spec, batch, backend) is enough.  NetworkSpec is frozen/hashable.
+_SYNTH_CACHE: dict[tuple, SynthesisReport] = {}
 
+
+def synthesize_cache_clear() -> None:
+    _SYNTH_CACHE.clear()
+
+
+def synthesize_cache_info() -> dict:
+    return {"entries": len(_SYNTH_CACHE)}
+
+
+def _quant_analysis(spec: NetworkSpec, backend: str, prog) -> dict | None:
+    """Honor ``spec.quant_bits`` (paper stage 3, Fig. 11).
+
+    mlp: bit-exact fixed-point simulation vs double reference → output SNR.
+    recurrent + pallas: gate activations switch to the ROM-LUT kernel path.
+    recurrent + xla: unsupported — raise rather than silently ignore.
+    (verilog always honors quant_bits as the RTL word width.)
+    """
+    if spec.quant_bits is None:
+        return None
+    if spec.cell == "mlp":
+        from .quantization import snr_sweep
+
+        sp = prog.stages[0].params
+        W = np.swapaxes(np.asarray(sp["W"], np.float64), -1, -2)
+        b = np.asarray(sp["b"], np.float64)[:, 0, :]
+        beta = np.asarray(prog.beta, np.float64)
+        C = np.asarray(prog.C, np.float64)
+        [(bits, snr)] = snr_sweep(W, b, beta, C, [spec.quant_bits],
+                                  num_inputs=128, seed=spec.seed)
+        return {"bits": bits, "mode": "fixed-point", "snr_db": float(np.mean(snr)),
+                "per_output_snr_db": [float(s) for s in snr]}
+    has_af = any(st.graph.af_nodes() for st in prog.stages)
+    if backend == "pallas" and has_af:  # ssm has no af units to quantize
+        return {"bits": spec.quant_bits, "mode": "lut"}
+    if backend == "verilog":
+        return {"bits": spec.quant_bits, "mode": "rtl-width"}
+    raise ValueError(
+        f"quant_bits={spec.quant_bits} with cell='{spec.cell}' is not supported "
+        f"on backend='{backend}' — use backend='pallas' on a cell with "
+        "activation units (ROM-LUT gates), backend='verilog' (RTL word "
+        "width), or cell='mlp' (fixed-point SNR)"
+    )
+
+
+def _analyze_compiled(fwd, params, u: jax.ShapeDtypeStruct):
+    """lower → compile → (timings, hlo bytes, flops, peak bytes)."""
     t0 = time.perf_counter()
     lowered = jax.jit(fwd).lower(params, u)
     t1 = time.perf_counter()
     compiled = lowered.compile()
     t2 = time.perf_counter()
-
     try:
         cost = compiled.cost_analysis()
         if isinstance(cost, (list, tuple)):  # older jax: one dict per device
@@ -223,18 +278,76 @@ def synthesize(spec: NetworkSpec, batch: int | None = None) -> SynthesisReport:
         )
     except Exception:
         peak = None
+    return t1 - t0, t2 - t1, len(lowered.as_text()), flops, peak
 
-    num_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+def synthesize(spec: NetworkSpec, batch: int | None = None,
+               backend: str = "xla") -> SynthesisReport:
+    """spec → IR program → {XLA scan, fused Pallas kernel, Verilog RTL}.
+
+    All backends consume the same :mod:`repro.codegen` program, so
+    ``backend="xla"`` and ``backend="pallas"`` are output-equivalent and
+    ``backend="verilog"`` additionally attaches the Table-I RTL text plus a
+    resource report cross-checked against ``compiled.cost_analysis()``.
+    Results are memoized by ``(spec, batch, backend)``.
+    """
+    from repro import codegen
+
+    if backend not in codegen.BACKENDS:
+        raise ValueError(
+            f"unknown backend '{backend}'; available: {codegen.BACKENDS}")
+    key = (spec, batch, backend)
+    if key in _SYNTH_CACHE:
+        return dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
+
+    program = codegen.build_program(spec)
+    quant = _quant_analysis(spec, backend, program)
+
+    lut = None
+    if quant is not None and quant["mode"] == "lut":
+        from repro.kernels.tanh_lut.ref import make_lut
+
+        lut = make_lut(min(max(spec.quant_bits // 2, 6), 10))
+    if backend == "pallas":
+        fwd = codegen.pallas_backend.compile_program(program, lut=lut)
+    else:  # "xla" and the verilog cross-check both compile the XLA program
+        fwd = codegen.xla_backend.compile_program(program)
+    params = program.params
+
+    u_shape = (spec.num_inputs,) if spec.cell == "mlp" \
+        else (spec.seq_len, spec.num_inputs)
+    u_shape = (batch or 1,) + u_shape
+    if spec.c_slow > 1:  # C interleaved streams through the one datapath
+        u_shape = (spec.c_slow,) + u_shape
+    u = jax.ShapeDtypeStruct(u_shape, jnp.float32)
+    lower_s, compile_s, hlo_bytes, flops, peak = _analyze_compiled(fwd, params, u)
+
+    rtl = resources = None
+    if backend == "verilog":
+        rtl = codegen.emit_program(program)
+        resources = codegen.report_program(program)
+        resources.xla_flops = flops          # the cost_analysis cross-check
+        resources.xla_peak_bytes = peak
+
     from .transition import serial_depth_estimate
 
-    return SynthesisReport(
+    report = SynthesisReport(
         spec=spec,
-        num_params=num_params,
-        trace_lower_s=t1 - t0,
-        compile_s=t2 - t1,
-        hlo_bytes=len(lowered.as_text()),
+        num_params=program.num_params(),
+        trace_lower_s=lower_s,
+        compile_s=compile_s,
+        hlo_bytes=hlo_bytes,
         flops=flops,
         peak_bytes=peak,
-        output_shape=(spec.num_outputs,) if batch is None else (batch, spec.num_outputs),
-        serial_depth=serial_depth_estimate(spec.serial_steps, spec.unroll),
+        # the true compiled output shape: always batched, stream axis when C>1
+        output_shape=(u_shape[:-1] if spec.cell == "mlp" else u_shape[:-2])
+        + (spec.num_outputs,),
+        serial_depth=serial_depth_estimate(
+            spec.serial_steps * spec.c_slow, spec.unroll),
+        backend=backend,
+        quant=quant,
+        rtl=rtl,
+        resources=resources,
     )
+    _SYNTH_CACHE[key] = report
+    return report

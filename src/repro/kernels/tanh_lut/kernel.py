@@ -15,10 +15,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels._compat import CompilerParams
-from repro.kernels._lut import RANGE, lut_interpolate, shifted_table
+from repro.kernels._lut import lut_interpolate, shifted_table
 
 DEFAULT_BLOCK = 1024
 

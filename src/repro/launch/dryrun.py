@@ -23,7 +23,6 @@ import re
 import time
 import traceback
 
-import jax
 import numpy as np
 
 from repro import optim
@@ -229,8 +228,6 @@ def main() -> int:
                                seq_axis=args.seq_axis)
                 rec["tag"] = args.tag
                 p = save_record(rec, args.out)
-                mm = rec.get("memory_analysis", {})
-                per_dev = (mm.get("argument_size_in_bytes", 0) + mm.get("temp_size_in_bytes", 0))
                 print(f"[ok]   {arch} {shape} {mesh_name} "
                       f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
                       f"flops={rec.get('cost_analysis', {}).get('flops', 'n/a'):.3e} "

@@ -10,7 +10,7 @@ code generator, grown up.
 from __future__ import annotations
 
 import dataclasses
-from typing import Literal, Sequence
+from typing import Literal
 
 import jax.numpy as jnp
 
@@ -89,6 +89,7 @@ class ModelConfig:
     remat: bool = True               # activation checkpointing in scan body
     scan_unroll: int = 1             # the paper's j knob
     use_pallas: bool = False         # TPU kernels (tests use interpret mode)
+    use_codegen: bool = False        # codegen-generated fused cell kernels
     sequence_parallel: bool = False  # shard seq over model axis in non-attn regions
     # attention TP is only legal when heads divide the model axis; plans may
     # disable it per-arch (smollm 9H, phi4 24H vs model=16):

@@ -216,7 +216,6 @@ def _ssd_chunk(x, dt, B, C, A, h0, chunk: int):
     matmuls (MXU-friendly): pairwise decay ⊙ (C_t·B_s) Gram matrix.
     """
     Bsz, T, H, P = x.shape
-    N = B.shape[-1]
     c = min(chunk, T)
     while T % c:
         c //= 2

@@ -7,10 +7,13 @@ carry as the decode state; decode applies the one-step transition map.  The
 carry is the entire serving state — O(1) per slot, the cheapest cache in the
 framework (``ModelConfig.kv_cache_bytes`` accounts it as 2·H·4 bytes).
 
-Fast path: ``cfg.use_pallas`` routes LSTM prefill through the fused Pallas
-``lstm_cell`` kernel (one [4H, D+H] contraction per step, VMEM-resident
-carry); the jnp path runs the same math through ``cells.run_cell`` /
-``lax.scan`` and is the kernel's oracle.
+Fast paths: ``cfg.use_pallas`` routes LSTM prefill through the hand-written
+fused Pallas ``lstm_cell`` kernel (one [4H, D+H] contraction per step,
+VMEM-resident carry); ``cfg.use_codegen`` routes prefill through the
+*generated* fused kernel from :mod:`repro.codegen` instead — same VMEM-carry
+structure, but produced from the cell's datapath IR, so it covers GRU (and
+any registered cell) too.  The jnp path runs the same math through
+``cells.run_cell`` / ``lax.scan`` and is the oracle for both.
 """
 
 from __future__ import annotations
@@ -58,11 +61,39 @@ def _carry_out(cfg: "ModelConfig", carry) -> PyTree:
     return {"h": carry}
 
 
+# Generated-kernel runners, one per (cell, D, H) datapath shape.  The runner
+# closes over graph structure only — weights are re-bound every call, so
+# trained parameters flow through without recompiling the generator.
+_CODEGEN_RUNNERS: dict[tuple, Any] = {}
+
+
+def _codegen_seq(cell: str, p_cell: PyTree, u: jnp.ndarray, carry0):
+    """Prefill via the codegen Pallas backend (works for lstm AND gru)."""
+    from repro import codegen
+
+    B, _, D = u.shape
+    H = cells.cell_hidden_size(p_cell, cell)
+    key = (cell, D, H)
+    run = _CODEGEN_RUNNERS.get(key)
+    if run is None:
+        run, _ = codegen.cell_stage_runner(cell, D, H)
+        _CODEGEN_RUNNERS[key] = run
+    if carry0 is None:
+        carry0 = cells.init_carry(cell, p_cell, (B,))
+    x0 = {"h": carry0[0], "c": carry0[1]} if cell == "lstm" else {"h": carry0}
+    finals, ys = run(codegen.bind_cell_params(cell, p_cell), x0,
+                     u.astype(jnp.float32))
+    carry = (finals["h"], finals["c"]) if cell == "lstm" else finals["h"]
+    return ys, carry
+
+
 def recurrent_prefill(p: PyTree, cfg: "ModelConfig", u: jnp.ndarray,
                       state: PyTree | None = None):
     """u: [B, T, D] → (y [B, T, D], state).  Resumes from ``state`` if given."""
     carry0 = None if state is None else _carry_in(cfg, state)
-    if cfg.use_pallas and cfg.rnn_cell == "lstm":
+    if cfg.use_codegen and cfg.rnn_cell in ("lstm", "gru"):
+        y, carry = _codegen_seq(cfg.rnn_cell, p["cell"], u, carry0)
+    elif cfg.use_pallas and cfg.rnn_cell == "lstm":
         from repro.kernels.lstm_cell import ops as lstm_ops
 
         c = p["cell"]

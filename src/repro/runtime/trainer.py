@@ -21,7 +21,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.parallel.compression import (
-    init_error_feedback,
     make_compressed_allreduce,
     reference_psum_mean,
 )

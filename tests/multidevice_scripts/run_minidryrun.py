@@ -7,7 +7,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro import optim
@@ -15,7 +14,6 @@ from repro.configs import get_smoke_config
 from repro.launch import steps as steps_lib
 from repro.models import lm
 from repro.models.config import ShapeSpec
-from repro.parallel import sharding as shd
 
 mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
 

@@ -10,7 +10,6 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import attention as att
-from repro.models.config import ModelConfig
 
 
 @pytest.fixture

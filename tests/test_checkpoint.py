@@ -1,8 +1,6 @@
 """Checkpoint manager: atomicity, async, pruning, restore, corruption."""
 
-import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp

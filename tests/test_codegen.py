@@ -1,0 +1,341 @@
+"""Codegen subsystem tests: IR validity, backend parity (XLA / Pallas /
+legacy Table-I path), golden-file Verilog, and the multi-backend
+``synthesize()`` flow (paper §IV-D3, Table I, Fig. 10)."""
+
+import dataclasses
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.codegen import (
+    CELL_GRAPHS,
+    GraphBuilder,
+    Schedule,
+    Stage,
+    bind_cell_params,
+    build_program,
+    compile_spec,
+    emit_program,
+    pallas_backend,
+    registered_cells,
+    report_program,
+    ssm_params,
+    xla_backend,
+)
+from repro.core.synthesis import (
+    NetworkSpec,
+    create_top_module,
+    synthesize,
+    synthesize_cache_clear,
+)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden"
+
+SPECS = {
+    "mlp": NetworkSpec(3, 4, 4, 2),
+    "lstm": NetworkSpec(3, 2, 8, 2, cell="lstm", seq_len=12),
+    "gru": NetworkSpec(3, 2, 8, 2, cell="gru", seq_len=12),
+    "ssm": NetworkSpec(3, 2, 8, 2, cell="ssm", seq_len=12),
+}
+
+
+def _input(spec: NetworkSpec, batch: int = 4, seed: int = 0):
+    shape = (batch, spec.num_inputs) if spec.cell == "mlp" \
+        else (batch, spec.seq_len, spec.num_inputs)
+    return jax.random.normal(jax.random.PRNGKey(seed), shape)
+
+
+# ---------------------------------------------------------------------------
+# IR structure
+# ---------------------------------------------------------------------------
+
+def test_all_cells_registered():
+    assert set(SPECS) <= set(registered_cells())
+
+
+@pytest.mark.parametrize("cell", sorted(SPECS))
+def test_program_validates(cell):
+    prog = build_program(SPECS[cell])
+    prog.validate()
+    assert prog.stages and prog.C is not None
+
+
+def test_graphbuilder_rejects_malformed():
+    from repro.codegen import DatapathGraph, Node
+
+    bad = DatapathGraph(
+        nodes=[Node("x", "state", (), 4), Node("z", "macc", ("x", "missing_w"), 4)],
+        states={"x": 4}, updates={"x": "z"})
+    with pytest.raises(ValueError, match="before definition"):
+        bad.validate()
+    g2 = GraphBuilder()
+    g2.state("x", 4)  # never written back
+    with pytest.raises(ValueError, match="write-back"):
+        g2.build()
+
+
+def test_schedule_transforms():
+    s = Schedule(steps=8)
+    assert s.with_unroll(4).unroll == 4 and s.with_c_slow(3).c_slow == 3
+    assert s.with_c_slow(3).cycles == 24  # C·N cycles — Fig. 5
+    with pytest.raises(ValueError):
+        s.with_unroll(0)
+
+
+def test_program_num_params_matches_legacy():
+    """IR const ROMs hold exactly the Table-I parameter count."""
+    for cell in ("mlp", "lstm", "gru"):
+        spec = SPECS[cell]
+        prog = build_program(spec)
+        legacy, _ = create_top_module(spec)
+        legacy_n = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(legacy))
+        assert prog.num_params() == legacy_n, cell
+
+
+# ---------------------------------------------------------------------------
+# Backend parity (acceptance: pallas ≡ xla ≤ 1e-5 fp32, interpret mode)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", ["mlp", "lstm", "gru"])
+def test_xla_backend_matches_legacy_table1_path(cell):
+    """IR→XLA ≡ the hand-wired create_top_module forward (same key schedule)."""
+    spec = SPECS[cell]
+    params, fwd = compile_spec(spec, backend="xla")
+    legacy_p, legacy_f = create_top_module(spec)
+    u = _input(spec)
+    y_ir = fwd(params, u)
+    y_legacy = jax.vmap(legacy_f, in_axes=(None, 0))(legacy_p, jnp.asarray(u))
+    np.testing.assert_allclose(np.asarray(y_ir), np.asarray(y_legacy), atol=1e-5)
+
+
+@pytest.mark.parametrize("cell", sorted(SPECS))
+def test_pallas_backend_matches_xla(cell):
+    spec = SPECS[cell]
+    p1, f1 = compile_spec(spec, backend="xla")
+    p2, f2 = compile_spec(spec, backend="pallas")
+    u = _input(spec)
+    np.testing.assert_allclose(np.asarray(f1(p1, u)), np.asarray(f2(p2, u)),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("cell", ["lstm", "gru", "ssm"])
+def test_pallas_ys_stream_matches_run_scan(cell):
+    """The generated kernel's per-step output stream ≡ core run_scan over the
+    same graph — chunking/VMEM-carry must be invisible."""
+    D, H, B, T = 3, 8, 4, 16
+    graph = CELL_GRAPHS[cell](D, H)
+    stage = Stage(name=cell, graph=graph, schedule=Schedule(steps=T), params={})
+    key = jax.random.PRNGKey(7)
+    if cell == "ssm":
+        cell_p = ssm_params(key, D, H)
+    else:
+        from repro.recurrent import cells as rnn_cells
+        ctor = rnn_cells.lstm_params if cell == "lstm" else rnn_cells.gru_params
+        cell_p = ctor(key, D, H)
+    consts = bind_cell_params(cell, cell_p)
+    us = jax.random.normal(jax.random.PRNGKey(8), (B, T, D))
+    x0 = {n: jnp.zeros((B, w)) for n, w in graph.states.items()}
+    run_p = pallas_backend.compile_stage(stage, chunk=4)  # force multi-chunk
+    fin_p, ys_p = run_p(consts, x0, us)
+    run_x = xla_backend.compile_stage(stage)
+    fin_x, ys_x = run_x(consts, x0, us)
+    np.testing.assert_allclose(np.asarray(ys_p), np.asarray(ys_x), atol=1e-5)
+    for n in graph.states:
+        np.testing.assert_allclose(np.asarray(fin_p[n]), np.asarray(fin_x[n]),
+                                   atol=1e-5)
+
+
+def test_ssm_cell_matches_linear_recurrence_oracle():
+    """ssm graph ≡ h[t] = a·h[t-1] + (u W + b) via core linear_recurrence."""
+    from repro.core.transition import linear_recurrence_serial
+
+    spec = NetworkSpec(3, 1, 8, 2, cell="ssm", seq_len=10)
+    prog = build_program(spec)
+    params, fwd = compile_spec(spec, backend="xla")
+    u = _input(spec, batch=2)
+    y = fwd(params, u)
+    sp = prog.stages[0].params
+    a = jnp.broadcast_to(sp["a"][0], (10, 2, 8))
+    drive = jnp.moveaxis(jnp.asarray(u), 1, 0) @ sp["w_in"] + sp["b"][0]
+    hs = linear_recurrence_serial(a, drive, jnp.zeros((2, 8)))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(hs[-1] @ prog.C.T),
+                               atol=1e-5)
+
+
+def test_unroll_is_semantics_free():
+    spec = SPECS["lstm"]
+    u = _input(spec)
+    base = compile_spec(spec, backend="pallas")
+    fast = compile_spec(dataclasses.replace(spec, unroll=4), backend="pallas")
+    np.testing.assert_allclose(np.asarray(base[1](base[0], u)),
+                               np.asarray(fast[1](fast[0], u)), atol=1e-5)
+
+
+def test_cslow_streams_equal_independent_runs():
+    """c_slow=C through cslow_vectorized ≡ running C streams independently."""
+    spec = dataclasses.replace(SPECS["gru"], c_slow=3)
+    pc, fc = compile_spec(spec, backend="xla")
+    p1, f1 = compile_spec(dataclasses.replace(spec, c_slow=1), backend="xla")
+    uc = jax.random.normal(jax.random.PRNGKey(3), (3, 2, spec.seq_len, 3))
+    yc = fc(pc, uc)
+    y_ref = jnp.stack([f1(p1, uc[i]) for i in range(3)])
+    np.testing.assert_allclose(np.asarray(yc), np.asarray(y_ref), atol=1e-5)
+    # pallas folds the stream axis into the batch grid axis — same answer
+    pp, fp = compile_spec(spec, backend="pallas")
+    np.testing.assert_allclose(np.asarray(fp(pp, uc)), np.asarray(y_ref),
+                               atol=1e-5)
+
+
+def test_pallas_lut_gates_approximate_float():
+    """ROM-LUT gate activations (paper §IV-B) track the float kernel."""
+    from repro.kernels.tanh_lut.ref import make_lut
+
+    spec = SPECS["lstm"]
+    params, f_float = compile_spec(spec, backend="pallas")
+    prog = build_program(spec)
+    f_lut = pallas_backend.compile_program(prog, lut=make_lut(10))
+    u = _input(spec)
+    err = np.abs(np.asarray(f_lut(params, u) - f_float(params, u))).max()
+    assert 0 < err < 5e-2  # quantized but close
+
+
+# ---------------------------------------------------------------------------
+# Verilog backend
+# ---------------------------------------------------------------------------
+
+def test_verilog_golden_file():
+    """Emitted RTL is byte-stable: module ordering, parameterized widths."""
+    spec = NetworkSpec(3, 4, 4, 2, quant_bits=16)
+    rtl = emit_program(build_program(spec))
+    golden = (GOLDEN / "mlp_case_study_q16.v").read_text()
+    assert rtl == golden
+
+
+def test_verilog_width_parameterized():
+    spec = NetworkSpec(3, 4, 4, 2, quant_bits=12)
+    rtl = emit_program(build_program(spec))
+    assert "parameter WIDTH = 12" in rtl and "WIDTH = 16" not in rtl
+
+
+@pytest.mark.parametrize("cell", sorted(SPECS))
+def test_verilog_table1_structure(cell):
+    rtl = emit_program(build_program(SPECS[cell]))
+    assert rtl == emit_program(build_program(SPECS[cell]))  # deterministic
+    for mod in ("Create_mult", "Create_Layer", "Create_TopModule",
+                "Create_Layer_End_C", "Create_Datapath"):
+        assert mod in rtl, f"{cell}: missing {mod}"
+    if cell != "mlp":
+        assert "Create_AF_" in rtl or cell == "ssm"
+
+
+@pytest.mark.parametrize("cell", sorted(SPECS))
+def test_verilog_structurally_sound(cell):
+    """Every instantiated module is defined, every top-level net referenced
+    by the FSM is declared, and biased MACC layers carry a bias ROM."""
+    import re
+
+    rtl = emit_program(build_program(SPECS[cell]))
+    defined = re.findall(r"^module (\w+)", rtl, re.M)
+    assert len(defined) == len(set(defined)), f"{cell}: duplicate modules"
+    instantiated = set(re.findall(r"^\s*(Create_\w+) #\(", rtl, re.M))
+    missing = instantiated - set(defined)
+    assert not missing, f"{cell}: instantiated but undefined: {missing}"
+    # coefficient ROMs are loaded (self-contained RTL): one initial block
+    # per weight ROM and per bias ROM
+    assert rtl.count("  initial begin") == rtl.count("] rom [") + rtl.count("] rom_b [")
+    top = rtl[rtl.index("module Create_TopModule"):]
+    for net in ("step_done_all", "x_final", "load_done", "read_done",
+                "step_start", "load"):
+        assert re.search(rf"wire[^;\n]*\b{net}\b", top), f"{cell}: {net} undeclared"
+    if cell == "mlp":
+        assert re.search(r"wire[^;\n]*\bx0_bus\b", top)
+    # every macc node in the IR carries its bias into a bias ROM
+    prog = build_program(SPECS[cell])
+    n_biased = sum(1 for st in prog.stages for n in st.graph.macc_nodes()
+                   if len(n.inputs) == 3)
+    assert rtl.count("rom_b [") == n_biased
+
+
+def test_resource_report_counts():
+    rep = report_program(build_program(SPECS["mlp"]))
+    assert rep.dsp_macc_lanes == 4            # M=4 MACC lanes, one layer module
+    assert rep.fsm_cycles == 4                # N=4 time-multiplexed steps
+    assert rep.rom_bits > 0 and rep.state_reg_bits == 4 * 18
+    # 2·M·M·N macc + bias adds are counted via macc; readout/injection extra
+    assert rep.flops_per_inference > 2 * 4 * 4 * 4
+
+
+# ---------------------------------------------------------------------------
+# synthesize(): the multi-backend push-button flow
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", sorted(SPECS))
+def test_synthesize_backends(cell):
+    spec = SPECS[cell]
+    rep_x = synthesize(spec, batch=2, backend="xla")
+    rep_p = synthesize(spec, batch=2, backend="pallas")
+    rep_v = synthesize(spec, batch=2, backend="verilog")
+    assert rep_x.hlo_bytes > 0 and rep_p.hlo_bytes > 0
+    assert rep_v.rtl and "Create_TopModule" in rep_v.rtl
+    assert rep_v.resources.xla_flops is None or rep_v.resources.xla_flops > 0
+    assert rep_x.num_params == rep_p.num_params == rep_v.num_params
+
+
+def test_synthesize_memoized():
+    synthesize_cache_clear()
+    spec = NetworkSpec(3, 3, 4, 2, seed=123)
+    r1 = synthesize(spec, batch=2)
+    r2 = synthesize(spec, batch=2)
+    assert not r1.cache_hit and r2.cache_hit
+    assert r2.num_params == r1.num_params
+    # different key -> fresh synthesis
+    assert not synthesize(spec, batch=3).cache_hit
+
+
+def test_synthesize_quant_bits_mlp_snr():
+    rep = synthesize(NetworkSpec(3, 4, 4, 2, quant_bits=20), batch=2)
+    assert rep.quant["mode"] == "fixed-point"
+    assert rep.quant["snr_db"] > 40.0  # paper Fig. 11: ~20 bits suffice
+
+
+def test_synthesize_quant_bits_unsupported_raises():
+    spec = NetworkSpec(3, 2, 8, 2, cell="lstm", seq_len=8, quant_bits=16)
+    with pytest.raises(ValueError, match="not supported"):
+        synthesize(spec, batch=2, backend="xla")
+    # but pallas (LUT gates) and verilog (RTL width) honor it
+    assert synthesize(spec, batch=2, backend="pallas").quant["mode"] == "lut"
+    assert synthesize(spec, batch=2, backend="verilog").quant["mode"] == "rtl-width"
+    # ssm has no activation units — a pallas LUT would be a silent no-op
+    ssm = NetworkSpec(3, 2, 8, 2, cell="ssm", seq_len=8, quant_bits=16)
+    with pytest.raises(ValueError, match="not supported"):
+        synthesize(ssm, batch=2, backend="pallas")
+
+
+def test_synthesize_cslow_depth_and_shapes():
+    spec = NetworkSpec(3, 2, 8, 2, cell="gru", seq_len=8, c_slow=2)
+    rep = synthesize(spec, batch=2)
+    assert rep.serial_depth == 16  # C·N serial cycles through one datapath
+
+
+# ---------------------------------------------------------------------------
+# recurrent block fast path (cfg.use_codegen)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", ["lstm", "gru"])
+def test_block_codegen_fast_path_matches_jnp(cell):
+    from repro.configs.paper_lstm import gru_config, smoke_config
+    from repro.models import lm
+
+    base = smoke_config() if cell == "lstm" else dataclasses.replace(
+        gru_config(), n_layers=2, d_model=64, vocab=256, rnn_hidden=48)
+    cfg = dataclasses.replace(base, use_codegen=True)
+    params = lm.init_params(base, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, base.vocab)
+    ref, _ = lm.prefill(params, base, toks)
+    got, caches = lm.prefill(params, cfg, toks)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=2e-5)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: a.shape == b.shape, caches, lm.init_cache(base, 2, 16)))

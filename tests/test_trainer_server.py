@@ -2,7 +2,6 @@
 straggler monitor, and the continuous-batching server vs oracle."""
 
 import dataclasses
-import shutil
 
 import jax
 import jax.numpy as jnp

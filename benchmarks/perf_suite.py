@@ -1,0 +1,136 @@
+"""Canonical perf baseline: the three PR-3 throughput levers in one JSON.
+
+Measures, on identical workloads:
+
+  decode_per_token   — legacy ``DecodeServer.step()``: 1 host sync / token
+  decode_persistent  — jitted K-step device loop: 1 host sync / K tokens
+  cslow_vmap_xla     — ``cslow_vectorized`` vmap-of-scans over C streams
+  cslow_fused_pallas — ONE generated kernel over the C·B folded batch axis
+  gate_fp32 / gate_int8 — generated cell kernel, f32 vs int8 MACC datapath
+
+Every record carries the same schema::
+
+    {"bench": str, "config": {...}, "tokens_per_s": float,
+     "syncs_per_token": float}
+
+and the aggregate is written to ``benchmarks/BENCH_perf.json`` — the perf
+trajectory artifact CI uploads on every PR (``--smoke`` shrinks shapes so
+the artifact is produced in seconds on 2-CPU runners).
+
+NOTE: on CPU every Pallas path runs in interpret mode — absolute tokens/s
+are only meaningful *relative to each other* within one run; the
+``syncs_per_token`` column is the portable number (it counts dispatch
+structure, not FLOPs).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.codegen import bind_cell_params, cell_stage_runner, compile_spec
+from repro.configs import get_smoke_config
+from repro.core.synthesis import NetworkSpec
+from repro.models import lm
+from repro.recurrent import cells as rnn_cells
+from repro.runtime import DecodeServer, Request
+
+from .common import emit, time_call
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "BENCH_perf.json")
+
+
+def _decode_bench(records: list, smoke: bool) -> None:
+    cfg = get_smoke_config("smollm-135m")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    n_req, max_new, K = (3, 6, 4) if smoke else (6, 16, 8)
+
+    def requests():
+        rng = np.random.default_rng(0)
+        return [Request(uid=i,
+                        prompt=list(rng.integers(1, cfg.vocab,
+                                                 size=int(rng.integers(2, 6)))),
+                        max_new_tokens=max_new)
+                for i in range(n_req)]
+
+    for name, persistent in (("decode_per_token", False),
+                             ("decode_persistent", True)):
+        srv = DecodeServer(cfg, params, num_slots=2, max_seq=64,
+                           block_k=K, persistent=persistent)
+        for r in requests():
+            srv.submit(r)
+        t0 = time.perf_counter()
+        done = srv.run_until_drained()
+        wall = time.perf_counter() - t0
+        toks = sum(len(r.out_tokens) for r in done)
+        stats = srv.stats()
+        rec = {"bench": name,
+               "config": {"arch": cfg.name, "slots": 2, "requests": n_req,
+                          "max_new": max_new, "block_k": K if persistent else 1},
+               "tokens_per_s": toks / wall,
+               "syncs_per_token": stats["syncs_per_token"]}
+        records.append(rec)
+        emit(name, wall / max(toks, 1) * 1e6,
+             f"syncs/token={stats['syncs_per_token']:.3f}")
+
+
+def _cslow_bench(records: list, smoke: bool) -> None:
+    C, B, T = (2, 2, 8) if smoke else (4, 4, 16)
+    spec = NetworkSpec(8, 1, 16, 8, cell="gru", seq_len=T, c_slow=C)
+    u = jax.random.normal(jax.random.PRNGKey(1), (C, B, T, spec.num_inputs))
+    toks = C * B * T
+    for name, backend in (("cslow_vmap_xla", "xla"),
+                          ("cslow_fused_pallas", "pallas")):
+        params, fwd = compile_spec(spec, backend=backend)
+        f = jax.jit(fwd)
+        us = time_call(f, params, u, warmup=1, iters=3)
+        records.append({"bench": name,
+                        "config": {"cell": "gru", "c_slow": C, "batch": B,
+                                   "seq_len": T, "hidden": spec.nodes_per_layer},
+                        "tokens_per_s": toks / (us / 1e6),
+                        "syncs_per_token": 1.0 / toks})
+        emit(name, us, f"streams={C} folded_batch={C * B}")
+
+
+def _int8_bench(records: list, smoke: bool) -> None:
+    D = H = 16 if smoke else 32
+    B, T = (2, 8) if smoke else (4, 16)
+    p = rnn_cells.lstm_params(jax.random.PRNGKey(2), D, H)
+    consts = bind_cell_params("lstm", p)
+    us = jax.random.normal(jax.random.PRNGKey(3), (B, T, D))
+    x0 = {"h": jnp.zeros((B, H)), "c": jnp.zeros((B, H))}
+    for name, bits in (("gate_fp32", None), ("gate_int8", 8)):
+        run, _ = cell_stage_runner("lstm", D, H, quant_bits=bits)
+        us_call = time_call(run, consts, x0, us, warmup=1, iters=3)
+        records.append({"bench": name,
+                        "config": {"cell": "lstm", "d_in": D, "hidden": H,
+                                   "batch": B, "seq_len": T,
+                                   "quant_bits": bits or 32},
+                        "tokens_per_s": B * T / (us_call / 1e6),
+                        "syncs_per_token": 1.0 / (B * T)})
+        emit(name, us_call, f"bits={bits or 32}")
+
+
+def run(out_dir: str = "experiments", smoke: bool = False) -> list:
+    os.makedirs(out_dir, exist_ok=True)
+    records: list = []
+    _decode_bench(records, smoke)
+    _cslow_bench(records, smoke)
+    _int8_bench(records, smoke)
+    payload = {"suite": "perf", "smoke": smoke, "records": records}
+    with open(OUT_JSON, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    with open(os.path.join(out_dir, "BENCH_perf.json"), "w") as fh:
+        json.dump(payload, fh, indent=2)
+    # headline ratios for the log
+    by = {r["bench"]: r for r in records}
+    ratio = by["decode_per_token"]["syncs_per_token"] / \
+        max(by["decode_persistent"]["syncs_per_token"], 1e-9)
+    emit("perf_suite", 0.0,
+         f"sync_reduction={ratio:.1f}x json={os.path.basename(OUT_JSON)}")
+    return records

@@ -13,6 +13,12 @@ CSVs under ``experiments/``.
   kernels— kernel reference micro-benches
   int8   — weight-only int8 serving comparison
   roofline — §Roofline terms from the dry-run artifacts
+
+Suites bundle benches into a single JSON artifact:
+
+  --suite perf [--smoke] — decode sync structure (per-token vs persistent
+  K-step), C-slow fused-vs-vmap, int8-vs-fp32 gate path →
+  ``benchmarks/BENCH_perf.json`` (the CI perf-trajectory artifact).
 """
 
 from __future__ import annotations
@@ -24,13 +30,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: fig11 fig10 table1 fig3 fig5 lstm codegen "
-                         "kernels int8 roofline")
+                         "kernels int8 roofline perf")
+    ap.add_argument("--suite", choices=["perf"], default=None,
+                    help="run one aggregated suite instead of the figure benches")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes (CI-sized artifact in seconds)")
     ap.add_argument("--out", default="experiments")
     args = ap.parse_args()
 
     from . import (codegen_bench, fig3_jstep, fig5_cslow, fig10_generator,
                    fig11_snr, int8_serving, kernels_bench, lstm_throughput,
-                   roofline, table1_api)
+                   perf_suite, roofline, table1_api)
+
+    if args.suite == "perf":
+        print("name,us_per_call,derived")
+        perf_suite.run(args.out, smoke=args.smoke)
+        return
 
     benches = {
         "fig11": lambda: fig11_snr.run(args.out),
@@ -42,9 +57,10 @@ def main() -> None:
         "codegen": lambda: codegen_bench.run(args.out),
         "kernels": lambda: kernels_bench.run(args.out),
         "int8": lambda: int8_serving.run(args.out),
+        "perf": lambda: perf_suite.run(args.out, smoke=args.smoke),
         "roofline": lambda: roofline.run(args.out),
     }
-    selected = args.only or list(benches)
+    selected = args.only or [n for n in benches if n != "perf"]
     print("name,us_per_call,derived")
     for name in selected:
         benches[name]()

@@ -27,6 +27,12 @@ def main() -> None:
     ap.add_argument("--codegen", action="store_true",
                     help="route recurrent prefill through the generated "
                          "fused cell kernel (repro.codegen fast path)")
+    ap.add_argument("--persistent", action="store_true",
+                    help="persistent device-side decode: one jitted K-step "
+                         "loop per dispatch, one host sync per K tokens")
+    ap.add_argument("--block-k", type=int, default=8,
+                    help="decode steps per persistent block (the serving "
+                         "unroll knob)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -43,7 +49,8 @@ def main() -> None:
               f"{stats['compression']:.2f}x compression "
               f"({stats['bytes_before']/1e6:.1f} -> {stats['bytes_after']/1e6:.1f} MB)")
         params = dequantize_lm_params(qp)  # W8A16: dense compute, int8 storage
-    server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq)
+    server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
+                          block_k=args.block_k, persistent=args.persistent)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -60,8 +67,11 @@ def main() -> None:
     toks = sum(len(r.out_tokens) for r in done)
     ttfts = [r.first_token_at - r.submitted_at for r in done]
     lats = [r.done_at - r.submitted_at for r in done]
-    print(f"arch={cfg.name} slots={args.slots} requests={len(done)}")
-    print(f"generated {toks} tokens in {wall:.2f}s -> {toks / wall:.1f} tok/s")
+    stats = server.stats()
+    mode = f"persistent(K={args.block_k})" if args.persistent else "per-token"
+    print(f"arch={cfg.name} slots={args.slots} requests={len(done)} mode={mode}")
+    print(f"generated {toks} tokens in {wall:.2f}s -> {toks / wall:.1f} tok/s "
+          f"({stats['syncs_per_token']:.3f} host syncs/token)")
     print(f"TTFT   p50={np.percentile(ttfts, 50)*1e3:.0f}ms p95={np.percentile(ttfts, 95)*1e3:.0f}ms")
     print(f"E2E    p50={np.percentile(lats, 50)*1e3:.0f}ms p95={np.percentile(lats, 95)*1e3:.0f}ms")
     for r in done[:3]:

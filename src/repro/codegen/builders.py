@@ -201,7 +201,11 @@ def cell_stage_runner(cell: str, d_in: int, hidden: int, *, jit: bool = True,
     Returns ``(run, graph)`` where ``run(consts, x0, us)`` is the Pallas
     stage executor (``consts`` from :func:`bind_cell_params`, ``x0`` a dict
     of ``[B, width]`` state registers from ``graph.states``, ``us``
-    ``[B, T, d_in]``).  The schedule steps come from ``us`` at call time.
+    ``[B, T, d_in]``).  The schedule steps come from ``us`` at call time;
+    ragged ``B``/``T`` are padded + masked by the backend.  ``compile_opts``
+    forward to :func:`pallas_backend.compile_stage` — notably
+    ``quant_bits<=8`` (int8 gate MACC), ``lut`` (ROM-LUT activations),
+    ``chunk``/``block_b`` (tiling), and ``double_buffer`` (ROM prefetch).
     Shared by the recurrent block fast path, the codegen benchmark, and
     tests — one place owns the Stage-assembly recipe.
     """

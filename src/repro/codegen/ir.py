@@ -155,6 +155,24 @@ class DatapathGraph:
     def af_nodes(self) -> list[Node]:
         return [n for n in self.nodes if n.op == "af"]
 
+    def quantizable_weights(self) -> list[str]:
+        """Const names eligible for the fixed-point MACC path (paper §IV-B):
+        every 2-D coefficient ROM whose ONLY uses are macc weight ports.
+        Biases (3rd macc input) and elementwise consts stay full-precision;
+        a const with any non-weight-port use is excluded entirely — its
+        quantized codes would reach the other consumer undequantized."""
+        weight_uses: set[str] = set()
+        for n in self.macc_nodes():
+            w = self.node(n.inputs[1])
+            if w.op == "const" and len(w.attr("shape")) == 2:
+                weight_uses.add(w.name)
+        other_uses = {
+            i for n in self.nodes for j, i in enumerate(n.inputs)
+            if not (n.op == "macc" and j == 1)
+        }
+        return [n.name for n in self.consts()
+                if n.name in weight_uses and n.name not in other_uses]
+
 
 @dataclasses.dataclass(frozen=True)
 class Schedule:
@@ -314,6 +332,7 @@ def eval_graph(
     states: Mapping[str, jnp.ndarray],
     u: jnp.ndarray | None,
     act: Callable[[str], Callable[[jnp.ndarray], jnp.ndarray]],
+    mm: Callable[[jnp.ndarray, str, jnp.ndarray], jnp.ndarray] | None = None,
 ):
     """Evaluate one datapath step.  The SAME evaluator runs under ``lax.scan``
     (XLA backend) and inside the generated Pallas kernel body — the ops are
@@ -324,9 +343,14 @@ def eval_graph(
       states: register name -> current value ``[..., width]``.
       u: the per-step input bus, or None for autonomous graphs.
       act: activation-name -> callable resolver (the LUT hook).
+      mm: optional MACC override ``(x, w_name, w) -> x·w`` — the fixed-point
+        datapath hook (the generated kernel routes int8 weights + per-channel
+        scales here; default is the f32 contraction).
 
     Returns (new_states dict, output value or None).
     """
+    if mm is None:
+        mm = lambda x, _name, w: x @ w
     env: dict[str, jnp.ndarray] = {}
     for n in graph.nodes:
         if n.op == "input":
@@ -338,7 +362,7 @@ def eval_graph(
         elif n.op == "const":
             env[n.name] = consts(n.name)
         elif n.op == "macc":
-            v = env[n.inputs[0]] @ env[n.inputs[1]]
+            v = mm(env[n.inputs[0]], n.inputs[1], env[n.inputs[1]])
             if len(n.inputs) == 3:
                 v = v + env[n.inputs[2]]
             env[n.name] = v

@@ -8,12 +8,27 @@ between chunks); within a chunk the ``ct`` steps are a static unroll (the
 j knob); the graph is evaluated per step by the SAME ``ir.eval_graph`` the
 XLA backend uses — macc nodes hit the MXU, gate algebra the VPU.
 
-Const ROMs: shared consts are resident whole; per-step consts (the MLP's
-stacked W[k] pages) stream in chunk-sized blocks via their BlockSpec.
+Ragged shapes: ``B`` and ``T`` are padded up to the block/chunk multiple and
+the padded tail steps are masked out of the state update, so prime-sized
+batches and sequence lengths run the SAME tiling as round ones instead of
+degrading to 1-wide blocks (or crashing).
 
-Quantized path (paper §IV-B): ``lut`` switches tanh/sigmoid to the shared
-ROM-LUT idiom of ``kernels/_lut`` (one-hot × table MXU contractions with
-linear interpolation; σ(x) = (1 + tanh(x/2))/2 reuses the same table).
+Const ROMs: shared consts are resident whole; per-step consts (the MLP's
+stacked W[k] pages) live in HBM (``memory_space=ANY``) and are **double
+buffered**: while the datapath computes chunk t, an async DMA prefetches
+chunk t+1's ROM pages into the second half of a 2-slot VMEM scratch — the
+operand-streaming idiom every FPGA-accelerator survey names alongside loop
+pipelining (and the reason the FSM never stalls on coefficient fetch).
+``double_buffer=False`` falls back to BlockSpec streaming for A/B timing.
+
+Quantized paths (paper §IV-B):
+  * ``lut`` switches tanh/sigmoid to the shared ROM-LUT idiom of
+    ``kernels/_lut`` (one-hot × table MXU contractions with linear
+    interpolation; σ(x) = (1 + tanh(x/2))/2 reuses the same table).
+  * ``quant_bits <= 8`` switches every 2-D weight ROM feeding a macc node to
+    the ``kernels/int8_matmul`` datapath: int8 weights with per-channel
+    scales, dynamic per-row int8 activations, int32 MACC, one rescale —
+    the paper's fixed-point DSP datapath, composing with the LUT gates.
 """
 
 from __future__ import annotations
@@ -29,6 +44,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core.state_space import ACTIVATIONS
 from repro.kernels._compat import CompilerParams
 from repro.kernels._lut import lut_interpolate, shifted_table
+from repro.kernels.int8_matmul.ops import quantize_per_channel, quantize_rows
 
 from .ir import Program, Stage, eval_graph
 
@@ -62,13 +78,38 @@ def _act_resolver(lut_refs, n_lut: int) -> Callable:
     return act
 
 
+def _int8_mm(x, w, s_w):
+    """The fixed-point MACC: dynamic per-row int8 activations × per-channel
+    int8 weights, int32 accumulate, one rescale — ``kernels/int8_matmul``'s
+    datapath inlined into the generated kernel (casts to int32 before the
+    dot so Mosaic maps s8×s8→s32 onto the MXU)."""
+    x_q, s_x = quantize_rows(x)
+    z = jax.lax.dot_general(
+        x_q.astype(jnp.int32), w.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
+    )
+    return z.astype(jnp.float32) * s_x * s_w
+
+
+def _pad_to(arr, size: int, axis: int):
+    """Zero-pad ``arr`` up to ``size`` along ``axis`` (no-op when equal)."""
+    if arr.shape[axis] == size:
+        return arr
+    pads = [(0, 0)] * arr.ndim
+    pads[axis] = (0, size - arr.shape[axis])
+    return jnp.pad(arr, pads)
+
+
 def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
                   block_b: int = DEFAULT_BLOCK_B,
-                  interpret: bool | None = None) -> Callable:
+                  interpret: bool | None = None,
+                  quant_bits: int | None = None,
+                  double_buffer: bool = True) -> Callable:
     """Generate the fused kernel for one scheduled datapath.
 
     Returns ``run(consts, x0, us) -> (final_states, ys)`` with ``x0`` leaves
     ``[B, width]`` and ``us`` ``[B, T, D]`` (None for autonomous graphs).
+    Any ``B``/``T`` is accepted (padded + masked internally).
     """
     graph, sched = stage.graph, stage.schedule
     state_names = sorted(graph.states)
@@ -80,15 +121,26 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
     n_state = len(state_names)
     n_lut = 0 if lut is None else int(lut.shape[0])
     itp = INTERPRET if interpret is None else interpret
+    int8 = quant_bits is not None and quant_bits <= 8
+    qnames = set(graph.quantizable_weights()) if int8 else set()
+    ps_q = [n for n in per_step if n in qnames]       # streamed int8 ROMs
+    sh_q = [n for n in shared_names if n in qnames]   # resident int8 ROMs
+    # double-buffered stream set: per-step ROM pages + their scale pages
+    stream_names = per_step + [f"{n}.scale" for n in ps_q]
 
-    def kernel(*refs, ct: int, last_chunk: int):
+    def kernel(*refs, ct: int, num_chunks: int, t_total: int):
+        db = double_buffer and bool(per_step)
         i = 0
         x_ref = refs[i] if inp is not None else None
         i += 1 if inp is not None else 0
         ps_refs = {name: refs[i + j] for j, name in enumerate(per_step)}
         i += len(per_step)
+        ps_scale = {name: refs[i + j] for j, name in enumerate(ps_q)}
+        i += len(ps_q)
         sh_refs = {name: refs[i + j] for j, name in enumerate(shared_names)}
         i += len(shared_names)
+        sh_scale = {name: refs[i + j] for j, name in enumerate(sh_q)}
+        i += len(sh_q)
         s0_refs = {name: refs[i + j] for j, name in enumerate(state_names)}
         i += n_state
         lut_refs = refs[i: i + (2 if n_lut else 0)]
@@ -98,6 +150,12 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
         fin_refs = {name: refs[i + j] for j, name in enumerate(state_names)}
         i += n_state
         scr = {name: refs[i + j] for j, name in enumerate(state_names)}
+        i += n_state
+        if db:
+            stream_scr = {name: refs[i + j]
+                          for j, name in enumerate(stream_names)}
+            i += len(stream_names)
+            dma_sem = refs[i]
 
         ci = pl.program_id(1)
 
@@ -106,8 +164,40 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
             for name in state_names:
                 scr[name][...] = s0_refs[name][...].astype(jnp.float32)
 
+        def hbm_of(name):
+            return ps_scale[name[:-6]] if name.endswith(".scale") else ps_refs[name]
+
+        if db:
+            # Double-buffered ROM streaming: chunk c's pages live in VMEM
+            # slot c%2; chunk c+1's DMA is issued BEFORE waiting on chunk c,
+            # so the fetch overlaps the datapath work below.
+            def dma(j, name, idx, slot):
+                return pltpu.make_async_copy(
+                    hbm_of(name).at[pl.ds(idx * ct, ct)],
+                    stream_scr[name].at[slot], dma_sem.at[j, slot])
+
+            @pl.when(ci == 0)
+            def _warm():
+                for j, name in enumerate(stream_names):
+                    dma(j, name, 0, 0).start()
+
+            @pl.when(ci + 1 < num_chunks)
+            def _prefetch():
+                nxt = jax.lax.rem(ci + 1, 2)
+                for j, name in enumerate(stream_names):
+                    dma(j, name, ci + 1, nxt).start()
+
+            slot = jax.lax.rem(ci, 2)
+            for j, name in enumerate(stream_names):
+                dma(j, name, ci, slot).wait()
+
+        def page(name, t):
+            """Per-step ROM page t of the current chunk."""
+            return stream_scr[name][slot, t] if db else hbm_of(name)[t]
+
         act = _act_resolver(lut_refs, n_lut)
         shared_vals = {name: sh_refs[name][...] for name in shared_names}
+        sh_scale_vals = {name: sh_scale[name][...] for name in sh_q}
         states = {name: scr[name][...] for name in state_names}
 
         ys = []
@@ -115,12 +205,25 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
             u_t = x_ref[:, t, :].astype(jnp.float32) if inp is not None else None
 
             def consts_get(name, t=t):
-                if name in ps_refs:
-                    return ps_refs[name][t]
+                if name in per_step:
+                    return page(name, t)
                 return shared_vals[name]
 
-            states, y = eval_graph(graph, consts=consts_get, states=states,
-                                   u=u_t, act=act)
+            def mm(x, w_name, w, t=t):
+                if w_name not in qnames:
+                    return x @ w
+                s_w = page(f"{w_name}.scale", t) if w_name in ps_q \
+                    else sh_scale_vals[w_name]
+                return _int8_mm(x, w, s_w)
+
+            new_states, y = eval_graph(graph, consts=consts_get, states=states,
+                                       u=u_t, act=act, mm=mm)
+            if num_chunks * ct != t_total:
+                # ragged T: padded tail steps must not advance the registers
+                valid = ci * ct + t < t_total
+                new_states = {k: jnp.where(valid, new_states[k], states[k])
+                              for k in new_states}
+            states = new_states
             if has_out:
                 ys.append(y)
 
@@ -129,7 +232,7 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
         if has_out:
             y_ref[...] = jnp.stack(ys, axis=1).astype(y_ref.dtype)
 
-        @pl.when(ci == last_chunk)
+        @pl.when(ci == num_chunks - 1)
         def _fin():
             for name in state_names:
                 fin_refs[name][...] = states[name]
@@ -137,33 +240,57 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
     def run(consts: dict, x0: dict, us):
         B = x0[state_names[0]].shape[0]
         T = us.shape[1] if us is not None else sched.steps
+        # pad-and-mask tiling: ragged B/T keep the full-width blocks
         ct = min(max(chunk, sched.unroll), T)
-        while T % ct:
-            ct //= 2
         bb = min(block_b, B)
-        while B % bb:
-            bb //= 2
+        Tp = -(-T // ct) * ct
+        Bp = -(-B // bb) * bb
+        num_chunks = Tp // ct
+        db = double_buffer and bool(per_step)
 
         in_specs, operands = [], []
         if inp is not None:
             D = inp.width
             in_specs.append(pl.BlockSpec((bb, ct, D), lambda i, c: (i, c, 0)))
-            operands.append(jnp.asarray(us, jnp.float32))
+            operands.append(_pad_to(_pad_to(
+                jnp.asarray(us, jnp.float32), Bp, 0), Tp, 1))
+
+        def add_stream(arr):
+            """Per-step operand: resident in ANY/HBM when double-buffered
+            (the kernel DMAs chunk slices itself), BlockSpec-chunked else."""
+            if db:
+                in_specs.append(pl.BlockSpec(memory_space=pltpu.ANY))
+            else:
+                tail = arr.shape[1:]
+                in_specs.append(pl.BlockSpec(
+                    (ct,) + tail, lambda i, c, nd=len(tail): (c,) + (0,) * nd))
+            operands.append(arr)
+
+        ps_scales = {}
         for name in per_step:
             arr = jnp.asarray(consts[name], jnp.float32)  # [T, ...]
-            tail = arr.shape[1:]
-            in_specs.append(pl.BlockSpec(
-                (ct,) + tail, lambda i, c, nd=len(tail): (c,) + (0,) * nd))
-            operands.append(arr)
+            if name in qnames:
+                arr, ps_scales[name] = quantize_per_channel(arr, axis=-2)
+            add_stream(_pad_to(arr, Tp, 0))
+        for name in ps_q:
+            add_stream(_pad_to(ps_scales[name], Tp, 0))
+        sh_scales = {}
         for name in shared_names:
             arr = jnp.asarray(consts[name], jnp.float32)
+            if name in qnames:
+                arr, sh_scales[name] = quantize_per_channel(arr, axis=-2)
+            in_specs.append(pl.BlockSpec(
+                arr.shape, lambda i, c, nd=arr.ndim: (0,) * nd))
+            operands.append(arr)
+        for name in sh_q:
+            arr = sh_scales[name]
             in_specs.append(pl.BlockSpec(
                 arr.shape, lambda i, c, nd=arr.ndim: (0,) * nd))
             operands.append(arr)
         for name in state_names:
             w = graph.states[name]
             in_specs.append(pl.BlockSpec((bb, w), lambda i, c: (i, 0)))
-            operands.append(jnp.asarray(x0[name], jnp.float32))
+            operands.append(_pad_to(jnp.asarray(x0[name], jnp.float32), Bp, 0))
         if n_lut:
             lut1 = shifted_table(lut)
             in_specs += [pl.BlockSpec((1, n_lut), lambda i, c: (0, 0))] * 2
@@ -174,20 +301,29 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
         if has_out:
             out_specs.append(pl.BlockSpec((bb, ct, out_width),
                                           lambda i, c: (i, c, 0)))
-            out_shape.append(jax.ShapeDtypeStruct((B, T, out_width), jnp.float32))
+            out_shape.append(jax.ShapeDtypeStruct((Bp, Tp, out_width), jnp.float32))
         for name in state_names:
             w = graph.states[name]
             out_specs.append(pl.BlockSpec((bb, w), lambda i, c: (i, 0)))
-            out_shape.append(jax.ShapeDtypeStruct((B, w), jnp.float32))
+            out_shape.append(jax.ShapeDtypeStruct((Bp, w), jnp.float32))
+
+        scratch_shapes = [pltpu.VMEM((bb, graph.states[n]), jnp.float32)
+                          for n in state_names]
+        if db:
+            # the 2-slot prefetch buffers + one DMA semaphore per (stream, slot)
+            for j, name in enumerate(stream_names):
+                src = operands[(1 if inp is not None else 0) + j]
+                scratch_shapes.append(
+                    pltpu.VMEM((2, ct) + src.shape[1:], src.dtype))
+            scratch_shapes.append(pltpu.SemaphoreType.DMA((len(stream_names), 2)))
 
         results = pl.pallas_call(
-            functools.partial(kernel, ct=ct, last_chunk=T // ct - 1),
-            grid=(B // bb, T // ct),
+            functools.partial(kernel, ct=ct, num_chunks=num_chunks, t_total=T),
+            grid=(Bp // bb, num_chunks),
             in_specs=in_specs,
             out_specs=out_specs,
             out_shape=out_shape,
-            scratch_shapes=[pltpu.VMEM((bb, graph.states[n]), jnp.float32)
-                            for n in state_names],
+            scratch_shapes=scratch_shapes,
             compiler_params=CompilerParams(
                 dimension_semantics=("parallel", "arbitrary")
             ),
@@ -197,8 +333,8 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
         o = 0
         ys = None
         if has_out:
-            ys, o = results[0], 1
-        finals = {name: results[o + j] for j, name in enumerate(state_names)}
+            ys, o = results[0][:B, :T], 1
+        finals = {name: results[o + j][:B] for j, name in enumerate(state_names)}
         return finals, ys
 
     return run
@@ -206,26 +342,35 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
 
 def compile_program(program: Program, *, lut=None,
                     chunk: int = DEFAULT_CHUNK, block_b: int = DEFAULT_BLOCK_B,
-                    interpret: bool | None = None) -> Callable:
+                    interpret: bool | None = None,
+                    quant_bits: int | None = None,
+                    double_buffer: bool = True) -> Callable:
     """IR → batched forward through generated fused kernels — the same
     signature as :func:`xla_backend.compile_program`.
 
-    ``c_slow = C > 1`` folds the stream axis into the batch grid axis: the
-    kernel's batch dimension IS the C-slow interleave (C independent streams
-    marching through one datapath — see ``kernels/lstm_cell``'s docstring).
+    ``c_slow = C > 1`` folds the stream axis into the batch grid axis
+    (:func:`repro.core.cslow.fold_streams`): the kernel's batch dimension IS
+    the C-slow interleave — ONE fused kernel launch carries all C·B streams
+    through the one datapath, instead of ``cslow_vectorized``'s
+    vmap-of-scans.  ``quant_bits <= 8`` runs every gate contraction on the
+    int8 MACC path (see :func:`compile_stage`).
     """
+    from repro.core.cslow import fold_streams, unfold_streams
+
     program.validate()
     runners = [compile_stage(st, lut=lut, chunk=chunk, block_b=block_b,
-                             interpret=interpret) for st in program.stages]
+                             interpret=interpret, quant_bits=quant_bits,
+                             double_buffer=double_buffer)
+               for st in program.stages]
     is_mlp = program.beta is not None
     readout = program.readout_state
     c_slow = program.stages[0].schedule.c_slow
 
     def forward(params: PyTree, u: jnp.ndarray) -> jnp.ndarray:
         u = jnp.asarray(u, jnp.float32)
-        lead = u.shape[: 2 if c_slow > 1 else 1]
+        C_streams = u.shape[0] if c_slow > 1 else 1
         if c_slow > 1:  # [C, B, ...] -> [(C·B), ...]: batch-axis interleave
-            u = u.reshape((lead[0] * lead[1],) + u.shape[2:])
+            u = fold_streams(u)
         C = jnp.asarray(params["C"], jnp.float32)
         sp = params["stages"]
         if is_mlp:
@@ -242,7 +387,7 @@ def compile_program(program: Program, *, lut=None,
                 finals, ys = run(p, x0, ys)
             y = finals[readout] @ C.T
         if c_slow > 1:
-            y = y.reshape(lead + y.shape[1:])
+            y = unfold_streams(y, C_streams)
         return y
 
     return forward

@@ -109,6 +109,24 @@ def cslow_vectorized(
     return jax.vmap(one_stream)(x0_streams, inputs_streams)
 
 
+def fold_streams(u: jnp.ndarray) -> jnp.ndarray:
+    """C-slow as batching: ``[C, B, ...] -> [(C·B), ...]``.
+
+    On the FPGA, C-slowing interleaves C independent streams through one
+    shared datapath, one per clock phase.  On a batch-parallel kernel grid
+    the same interleave is a *fold*: the C stream registers become C·B rows
+    of the one batch axis, so a single fused kernel launch carries every
+    stream — no vmap-of-scans, no per-stream dispatch.  Inverse:
+    :func:`unfold_streams`."""
+    return u.reshape((u.shape[0] * u.shape[1],) + u.shape[2:])
+
+
+def unfold_streams(y: jnp.ndarray, num_streams: int) -> jnp.ndarray:
+    """Undo :func:`fold_streams`: ``[(C·B), ...] -> [C, B, ...]``."""
+    C = num_streams
+    return y.reshape((C, y.shape[0] // C) + y.shape[1:])
+
+
 def pipeline_schedule(num_stages: int, num_microbatches: int) -> list[list[tuple[int, int]]]:
     """The C-slow/GPipe schedule table: at clock t, stage s processes
     microbatch t - s (if in range).  Returned as, per clock tick, a list of

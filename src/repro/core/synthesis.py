@@ -226,12 +226,16 @@ def _quant_analysis(spec: NetworkSpec, backend: str, prog) -> dict | None:
     """Honor ``spec.quant_bits`` (paper stage 3, Fig. 11).
 
     mlp: bit-exact fixed-point simulation vs double reference → output SNR.
-    recurrent + pallas: gate activations switch to the ROM-LUT kernel path.
+    recurrent + pallas: gate activations switch to the ROM-LUT kernel path;
+    ``quant_bits <= 8`` additionally runs every gate contraction on the
+    int8 MACC datapath (per-channel-scaled fixed-point weights — the paper's
+    DSP datapath), which also covers af-free cells like the ssm.
     recurrent + xla: unsupported — raise rather than silently ignore.
     (verilog always honors quant_bits as the RTL word width.)
     """
     if spec.quant_bits is None:
         return None
+    int8_macc = backend == "pallas" and spec.quant_bits <= 8
     if spec.cell == "mlp":
         from .quantization import snr_sweep
 
@@ -242,18 +246,21 @@ def _quant_analysis(spec: NetworkSpec, backend: str, prog) -> dict | None:
         C = np.asarray(prog.C, np.float64)
         [(bits, snr)] = snr_sweep(W, b, beta, C, [spec.quant_bits],
                                   num_inputs=128, seed=spec.seed)
-        return {"bits": bits, "mode": "fixed-point", "snr_db": float(np.mean(snr)),
+        return {"bits": bits, "mode": "fixed-point", "int8_macc": int8_macc,
+                "snr_db": float(np.mean(snr)),
                 "per_output_snr_db": [float(s) for s in snr]}
     has_af = any(st.graph.af_nodes() for st in prog.stages)
     if backend == "pallas" and has_af:  # ssm has no af units to quantize
-        return {"bits": spec.quant_bits, "mode": "lut"}
+        return {"bits": spec.quant_bits, "mode": "lut", "int8_macc": int8_macc}
+    if int8_macc:  # af-free cells still have MACC units to quantize
+        return {"bits": spec.quant_bits, "mode": "int8", "int8_macc": True}
     if backend == "verilog":
         return {"bits": spec.quant_bits, "mode": "rtl-width"}
     raise ValueError(
         f"quant_bits={spec.quant_bits} with cell='{spec.cell}' is not supported "
         f"on backend='{backend}' — use backend='pallas' on a cell with "
-        "activation units (ROM-LUT gates), backend='verilog' (RTL word "
-        "width), or cell='mlp' (fixed-point SNR)"
+        "activation units (ROM-LUT gates) or quant_bits<=8 (int8 MACC), "
+        "backend='verilog' (RTL word width), or cell='mlp' (fixed-point SNR)"
     )
 
 
@@ -309,7 +316,9 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
 
         lut = make_lut(min(max(spec.quant_bits // 2, 6), 10))
     if backend == "pallas":
-        fwd = codegen.pallas_backend.compile_program(program, lut=lut)
+        int8_bits = spec.quant_bits if quant and quant.get("int8_macc") else None
+        fwd = codegen.pallas_backend.compile_program(
+            program, lut=lut, quant_bits=int8_bits)
     else:  # "xla" and the verilog cross-check both compile the XLA program
         fwd = codegen.xla_backend.compile_program(program)
     params = program.params

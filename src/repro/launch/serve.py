@@ -17,6 +17,9 @@ def main() -> None:
     ap.add_argument("--slots", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--persistent", action="store_true",
+                    help="device-side K-step decode blocks (1 sync / K tokens)")
+    ap.add_argument("--block-k", type=int, default=8)
     args = ap.parse_args()
 
     import time
@@ -30,7 +33,8 @@ def main() -> None:
 
     cfg = get_smoke_config(args.arch)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
-    server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq)
+    server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
+                          block_k=args.block_k, persistent=args.persistent)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -41,7 +45,8 @@ def main() -> None:
     wall = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {toks} tokens, {wall:.2f}s "
-          f"({toks / wall:.1f} tok/s)")
+          f"({toks / wall:.1f} tok/s, "
+          f"{server.stats()['syncs_per_token']:.3f} syncs/token)")
 
 
 if __name__ == "__main__":

@@ -90,6 +90,8 @@ class ModelConfig:
     scan_unroll: int = 1             # the paper's j knob
     use_pallas: bool = False         # TPU kernels (tests use interpret mode)
     use_codegen: bool = False        # codegen-generated fused cell kernels
+    quant_gate_bits: int = 0         # <=8 and >0: int8 gate MACC in the
+                                     # generated cell kernel (paper §IV-B)
     sequence_parallel: bool = False  # shard seq over model axis in non-attn regions
     # attention TP is only legal when heads divide the model axis; plans may
     # disable it per-arch (smollm 9H, phi4 24H vs model=16):

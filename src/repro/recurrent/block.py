@@ -67,16 +67,20 @@ def _carry_out(cfg: "ModelConfig", carry) -> PyTree:
 _CODEGEN_RUNNERS: dict[tuple, Any] = {}
 
 
-def _codegen_seq(cell: str, p_cell: PyTree, u: jnp.ndarray, carry0):
-    """Prefill via the codegen Pallas backend (works for lstm AND gru)."""
+def _codegen_seq(cell: str, p_cell: PyTree, u: jnp.ndarray, carry0,
+                 quant_bits: int = 0):
+    """Prefill via the codegen Pallas backend (works for lstm AND gru).
+    ``quant_bits`` in (0, 8] routes the gate contraction through the int8
+    MACC datapath of the generated kernel (paper's fixed-point stage)."""
     from repro import codegen
 
     B, _, D = u.shape
     H = cells.cell_hidden_size(p_cell, cell)
-    key = (cell, D, H)
+    key = (cell, D, H, quant_bits)
     run = _CODEGEN_RUNNERS.get(key)
     if run is None:
-        run, _ = codegen.cell_stage_runner(cell, D, H)
+        run, _ = codegen.cell_stage_runner(
+            cell, D, H, quant_bits=quant_bits or None)
         _CODEGEN_RUNNERS[key] = run
     if carry0 is None:
         carry0 = cells.init_carry(cell, p_cell, (B,))
@@ -92,7 +96,8 @@ def recurrent_prefill(p: PyTree, cfg: "ModelConfig", u: jnp.ndarray,
     """u: [B, T, D] → (y [B, T, D], state).  Resumes from ``state`` if given."""
     carry0 = None if state is None else _carry_in(cfg, state)
     if cfg.use_codegen and cfg.rnn_cell in ("lstm", "gru"):
-        y, carry = _codegen_seq(cfg.rnn_cell, p["cell"], u, carry0)
+        y, carry = _codegen_seq(cfg.rnn_cell, p["cell"], u, carry0,
+                                quant_bits=cfg.quant_gate_bits)
     elif cfg.use_pallas and cfg.rnn_cell == "lstm":
         from repro.kernels.lstm_cell import ops as lstm_ops
 

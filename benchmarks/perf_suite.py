@@ -1,4 +1,4 @@
-"""Canonical perf baseline: the three PR-3 throughput levers in one JSON.
+"""Canonical perf baseline: the serving/throughput levers in one JSON.
 
 Measures, on identical workloads:
 
@@ -7,20 +7,28 @@ Measures, on identical workloads:
   cslow_vmap_xla     — ``cslow_vectorized`` vmap-of-scans over C streams
   cslow_fused_pallas — ONE generated kernel over the C·B folded batch axis
   gate_fp32 / gate_int8 — generated cell kernel, f32 vs int8 MACC datapath
+  serve_mixed_unchunked / serve_mixed_chunked — mixed long/short-prompt
+      traffic; the chunked row must keep per-tick prompt work bounded by the
+      chunk while staying greedy-token-identical to the unchunked run
+  serve_shared_prefix — radix prefix cache on repeated prompts; a full hit
+      must recompute 0 prompt steps
 
 Every record carries the same schema::
 
     {"bench": str, "config": {...}, "tokens_per_s": float,
      "syncs_per_token": float}
 
-and the aggregate is written to ``benchmarks/BENCH_perf.json`` — the perf
-trajectory artifact CI uploads on every PR (``--smoke`` shrinks shapes so
-the artifact is produced in seconds on 2-CPU runners).
+(serving records add structural keys used by ``check()``), and the aggregate
+is written to ``benchmarks/BENCH_perf.json`` — the perf trajectory artifact
+CI uploads on every PR (``--smoke`` shrinks shapes so the artifact is
+produced in seconds on 2-CPU runners).  ``check()`` compares a fresh run
+against the committed JSON and fails the CI perf-smoke step on regression
+instead of only uploading the artifact.
 
 NOTE: on CPU every Pallas path runs in interpret mode — absolute tokens/s
 are only meaningful *relative to each other* within one run; the
 ``syncs_per_token`` column is the portable number (it counts dispatch
-structure, not FLOPs).
+structure, not FLOPs), and so are the serving structural keys.
 """
 
 from __future__ import annotations
@@ -116,12 +124,151 @@ def _int8_bench(records: list, smoke: bool) -> None:
         emit(name, us_call, f"bits={bits or 32}")
 
 
-def run(out_dir: str = "experiments", smoke: bool = False) -> list:
+def _serving_bench(records: list, smoke: bool) -> None:
+    """Mixed long/short-prompt traffic + shared-prefix admissions — the
+    heterogeneous-traffic scenario (chunked prefill, prefix cache)."""
+    cfg = get_smoke_config("smollm-135m")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    long_len, chunk, max_new = (16, 4, 3) if smoke else (32, 8, 6)
+    rng = np.random.default_rng(0)
+    long_prompt = list(rng.integers(1, cfg.vocab, size=long_len))
+    shorts = [list(rng.integers(1, cfg.vocab, size=int(rng.integers(2, 5))))
+              for _ in range(3)]
+
+    def traffic():
+        out = [Request(uid=99, prompt=list(long_prompt), max_new_tokens=max_new)]
+        out += [Request(uid=i, prompt=list(p), max_new_tokens=max_new)
+                for i, p in enumerate(shorts)]
+        return out
+
+    outs = {}
+    for name, c in (("serve_mixed_unchunked", 0), ("serve_mixed_chunked", chunk)):
+        srv = DecodeServer(cfg, params, num_slots=2, max_seq=2 * long_len,
+                           prefill_chunk=c)
+        for r in traffic():
+            srv.submit(r)
+        t0 = time.perf_counter()
+        done = srv.run_until_drained()
+        wall = time.perf_counter() - t0
+        outs[name] = {r.uid: list(r.out_tokens) for r in done}
+        toks = sum(len(r.out_tokens) for r in done)
+        ttfts = [r.first_token_at - r.submitted_at for r in done
+                 if r.first_token_at is not None]
+        stats = srv.stats()
+        rec = {"bench": name,
+               "config": {"arch": cfg.name, "slots": 2, "long_len": long_len,
+                          "shorts": len(shorts), "prefill_chunk": c,
+                          "max_new": max_new},
+               "tokens_per_s": toks / wall,
+               "syncs_per_token": stats["syncs_per_token"],
+               "ttft_p95_ms": float(np.percentile(ttfts, 95) * 1e3),
+               "max_prompt_steps_per_tick":
+                   stats["prefill"]["max_prompt_steps_per_tick"],
+               "tick_bound_ok": c == 0
+                   or stats["prefill"]["max_prompt_steps_per_tick"] <= c}
+        records.append(rec)
+        emit(name, wall / max(toks, 1) * 1e6,
+             f"max_steps/tick={rec['max_prompt_steps_per_tick']}")
+    greedy_ok = outs["serve_mixed_unchunked"] == outs["serve_mixed_chunked"]
+    records[-1]["greedy_identical"] = bool(greedy_ok)
+
+    # shared-prefix: resubmit the same prompts against a warm radix cache
+    srv = DecodeServer(cfg, params, num_slots=2, max_seq=2 * long_len,
+                       prefill_chunk=chunk, prefix_cache_bytes=256 << 20)
+    for r in traffic():
+        srv.submit(r)
+    cold = {r.uid: list(r.out_tokens) for r in srv.run_until_drained()}
+    cold_steps = srv.stats()["prefill"]["prompt_steps_computed"]
+    for r in traffic():
+        r.uid += 1000
+        srv.submit(r)
+    t0 = time.perf_counter()
+    done = srv.run_until_drained()
+    wall = time.perf_counter() - t0
+    warm = {r.uid - 1000: list(r.out_tokens) for r in done if r.uid >= 1000}
+    stats = srv.stats()
+    pc = stats["prefix_cache"]
+    recomputed = stats["prefill"]["prompt_steps_computed"] - cold_steps
+    toks = sum(len(t) for t in warm.values())
+    rec = {"bench": "serve_shared_prefix",
+           "config": {"arch": cfg.name, "prefill_chunk": chunk,
+                      "prompts": len(shorts) + 1, "long_len": long_len},
+           "tokens_per_s": toks / wall,
+           "syncs_per_token": stats["syncs_per_token"],
+           "prompt_steps_recomputed": int(recomputed),
+           "prompt_steps_saved": int(pc["prompt_steps_saved"]),
+           "cache_hits": int(pc["hits"]),
+           "greedy_identical": bool(warm == cold)}
+    records.append(rec)
+    emit("serve_shared_prefix", wall / max(toks, 1) * 1e6,
+         f"recomputed={recomputed} saved={pc['prompt_steps_saved']}")
+
+
+# ---------------------------------------------------------------------------
+# regression gate
+# ---------------------------------------------------------------------------
+
+SYNC_RTOL = 0.25          # syncs/token drift allowed at matching workload
+
+
+def check(fresh: dict, committed: dict) -> list[str]:
+    """Compare a fresh run against the committed baseline.  Returns a list
+    of human-readable regression messages (empty = pass).
+
+    Wall-clock columns are CI-noise and never gated; the gated quantities
+    are dispatch *structure* (syncs/token, the persistent-vs-legacy sync
+    reduction) and the serving invariants (bounded prompt work per tick,
+    zero recomputation on a full prefix hit, greedy-token identity)."""
+    failures: list[str] = []
+    fresh_by = {r["bench"]: r for r in fresh["records"]}
+    comm_by = {r["bench"]: r for r in committed["records"]}
+    for name in comm_by:
+        if name not in fresh_by:
+            failures.append(f"missing bench '{name}' (present in baseline)")
+    same_workload = bool(fresh.get("smoke")) == bool(committed.get("smoke"))
+    if same_workload:
+        for name, c in comm_by.items():
+            f = fresh_by.get(name)
+            if f is None:
+                continue
+            if f["syncs_per_token"] > c["syncs_per_token"] * (1 + SYNC_RTOL) + 1e-9:
+                failures.append(
+                    f"{name}: syncs_per_token {f['syncs_per_token']:.4f} > "
+                    f"baseline {c['syncs_per_token']:.4f} (+{SYNC_RTOL:.0%})")
+    # sync-reduction invariant: vs baseline at matching workload (block_k and
+    # max_new shape the ratio), vs an absolute structural floor otherwise
+    if "decode_per_token" in fresh_by and "decode_persistent" in fresh_by \
+            and "decode_per_token" in comm_by and "decode_persistent" in comm_by:
+        ratio = lambda by: by["decode_per_token"]["syncs_per_token"] / \
+            max(by["decode_persistent"]["syncs_per_token"], 1e-9)
+        floor = 0.8 * ratio(comm_by) if same_workload else 1.5
+        if ratio(fresh_by) < floor:
+            failures.append(
+                f"persistent sync reduction regressed: {ratio(fresh_by):.1f}x "
+                f"< floor {floor:.1f}x"
+                + ("" if same_workload else " (absolute, workloads differ)"))
+    for name, key, want in (("serve_mixed_chunked", "tick_bound_ok", True),
+                            ("serve_mixed_chunked", "greedy_identical", True),
+                            ("serve_shared_prefix", "prompt_steps_recomputed", 0),
+                            ("serve_shared_prefix", "greedy_identical", True)):
+        f = fresh_by.get(name)
+        if f is not None and name in comm_by and f.get(key) != want:
+            failures.append(f"{name}: {key}={f.get(key)!r}, expected {want!r}")
+    return failures
+
+
+def run(out_dir: str = "experiments", smoke: bool = False,
+        check_baseline: bool = False) -> list:
     os.makedirs(out_dir, exist_ok=True)
+    committed = None
+    if check_baseline and os.path.exists(OUT_JSON):
+        with open(OUT_JSON) as fh:
+            committed = json.load(fh)
     records: list = []
     _decode_bench(records, smoke)
     _cslow_bench(records, smoke)
     _int8_bench(records, smoke)
+    _serving_bench(records, smoke)
     payload = {"suite": "perf", "smoke": smoke, "records": records}
     with open(OUT_JSON, "w") as fh:
         json.dump(payload, fh, indent=2)
@@ -133,4 +280,14 @@ def run(out_dir: str = "experiments", smoke: bool = False) -> list:
         max(by["decode_persistent"]["syncs_per_token"], 1e-9)
     emit("perf_suite", 0.0,
          f"sync_reduction={ratio:.1f}x json={os.path.basename(OUT_JSON)}")
+    if committed is not None:
+        failures = check(payload, committed)
+        if failures:
+            for msg in failures:
+                print(f"PERF REGRESSION: {msg}")
+            raise SystemExit(1)
+        print(f"perf check passed vs committed baseline "
+              f"({len(committed['records'])} records)")
+    elif check_baseline:
+        print("perf check skipped: no committed BENCH_perf.json")
     return records

@@ -35,6 +35,9 @@ def main() -> None:
                     help="run one aggregated suite instead of the figure benches")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes (CI-sized artifact in seconds)")
+    ap.add_argument("--check", action="store_true",
+                    help="perf suite only: compare against the committed "
+                         "benchmarks/BENCH_perf.json and exit 1 on regression")
     ap.add_argument("--out", default="experiments")
     args = ap.parse_args()
 
@@ -44,7 +47,7 @@ def main() -> None:
 
     if args.suite == "perf":
         print("name,us_per_call,derived")
-        perf_suite.run(args.out, smoke=args.smoke)
+        perf_suite.run(args.out, smoke=args.smoke, check_baseline=args.check)
         return
 
     benches = {

@@ -33,6 +33,16 @@ def main() -> None:
     ap.add_argument("--block-k", type=int, default=8,
                     help="decode steps per persistent block (the serving "
                          "unroll knob)")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: consume prompts N tokens/tick, "
+                         "interleaved with decode (0 = one-shot prefill)")
+    ap.add_argument("--prefix-cache", type=int, default=0, metavar="MB",
+                    help="radix prefix cache byte budget in MB (0 = off); "
+                         "shared-prefix admissions splice stored state")
+    ap.add_argument("--scheduler", choices=["priority", "fifo"],
+                    default="priority",
+                    help="request scheduler policy (priority classes + "
+                         "fairness aging, or plain FIFO)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -49,8 +59,13 @@ def main() -> None:
               f"{stats['compression']:.2f}x compression "
               f"({stats['bytes_before']/1e6:.1f} -> {stats['bytes_after']/1e6:.1f} MB)")
         params = dequantize_lm_params(qp)  # W8A16: dense compute, int8 storage
+    from repro.runtime import SchedulerConfig
+
     server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
-                          block_k=args.block_k, persistent=args.persistent)
+                          block_k=args.block_k, persistent=args.persistent,
+                          prefill_chunk=args.prefill_chunk,
+                          prefix_cache_bytes=args.prefix_cache << 20,
+                          scheduler=SchedulerConfig(policy=args.scheduler))
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -65,15 +80,26 @@ def main() -> None:
     wall = time.perf_counter() - t0
 
     toks = sum(len(r.out_tokens) for r in done)
-    ttfts = [r.first_token_at - r.submitted_at for r in done]
-    lats = [r.done_at - r.submitted_at for r in done]
+    served = [r for r in done if r.first_token_at is not None]  # admission may reject
+    ttfts = [r.first_token_at - r.submitted_at for r in served]
+    lats = [r.done_at - r.submitted_at for r in served]
     stats = server.stats()
     mode = f"persistent(K={args.block_k})" if args.persistent else "per-token"
     print(f"arch={cfg.name} slots={args.slots} requests={len(done)} mode={mode}")
     print(f"generated {toks} tokens in {wall:.2f}s -> {toks / wall:.1f} tok/s "
           f"({stats['syncs_per_token']:.3f} host syncs/token)")
-    print(f"TTFT   p50={np.percentile(ttfts, 50)*1e3:.0f}ms p95={np.percentile(ttfts, 95)*1e3:.0f}ms")
-    print(f"E2E    p50={np.percentile(lats, 50)*1e3:.0f}ms p95={np.percentile(lats, 95)*1e3:.0f}ms")
+    if args.prefill_chunk:
+        pf = stats["prefill"]
+        print(f"prefill chunk={args.prefill_chunk}: {pf['chunks_run']} chunks, "
+              f"max {pf['max_prompt_steps_per_tick']} prompt steps/tick")
+    if args.prefix_cache:
+        pc = stats["prefix_cache"]
+        print(f"prefix cache: {pc['hits']} hits / {pc['partial_hits']} partial "
+              f"/ {pc['misses']} misses, {pc['prompt_steps_saved']} prompt "
+              f"steps saved, {pc['bytes_in_use'] / 1e6:.1f} MB")
+    if served:
+        print(f"TTFT   p50={np.percentile(ttfts, 50)*1e3:.0f}ms p95={np.percentile(ttfts, 95)*1e3:.0f}ms")
+        print(f"E2E    p50={np.percentile(lats, 50)*1e3:.0f}ms p95={np.percentile(lats, 95)*1e3:.0f}ms")
     for r in done[:3]:
         print(f"  req{r.uid}: prompt={r.prompt} -> {r.out_tokens}")
 

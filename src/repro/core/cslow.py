@@ -48,7 +48,14 @@ def cslow_scan(
     """
     C = num_streams
     if length is None:
-        length = jax.tree_util.tree_leaves(stacked_params)[0].shape[0]
+        leaves = jax.tree_util.tree_leaves(stacked_params)
+        if not leaves:
+            raise ValueError(
+                "cslow_scan: cannot infer the step count — stacked_params is "
+                "None/empty, so pass length= explicitly (the number of steps "
+                "each stream advances)."
+            )
+        length = leaves[0].shape[0]
     N = length
 
     def body(carry, t):

@@ -20,6 +20,12 @@ def main() -> None:
     ap.add_argument("--persistent", action="store_true",
                     help="device-side K-step decode blocks (1 sync / K tokens)")
     ap.add_argument("--block-k", type=int, default=8)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="chunked prefill: N prompt tokens per tick (0 = off)")
+    ap.add_argument("--prefix-cache", type=int, default=0, metavar="MB",
+                    help="radix prefix-cache byte budget in MB (0 = off)")
+    ap.add_argument("--scheduler", choices=["priority", "fifo"],
+                    default="priority")
     args = ap.parse_args()
 
     import time
@@ -29,12 +35,15 @@ def main() -> None:
 
     from repro.configs import get_smoke_config
     from repro.models import lm
-    from repro.runtime import DecodeServer, Request
+    from repro.runtime import DecodeServer, Request, SchedulerConfig
 
     cfg = get_smoke_config(args.arch)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
-                          block_k=args.block_k, persistent=args.persistent)
+                          block_k=args.block_k, persistent=args.persistent,
+                          prefill_chunk=args.prefill_chunk,
+                          prefix_cache_bytes=args.prefix_cache << 20,
+                          scheduler=SchedulerConfig(policy=args.scheduler))
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):

@@ -164,24 +164,27 @@ def _posv(pos, B):
 
 
 def gqa_decode(p, cfg: ModelConfig, x, cache: PyTree, pos, *, window: int = 0):
-    """One-token step: write (k,v) at ``pos``, attend over the cache.
+    """Cache-resident step for S ≥ 1 query tokens starting at ``pos``.
 
     cache = {"k": [B, S_max, KV, hd], "v": ...}; ``pos``: scalar or [B]
-    int32 (per-sequence positions for continuous batching).
+    int32 (per-sequence positions for continuous batching).  S == 1 is the
+    classic decode tick; S > 1 is a *chunked-prefill* continuation — the same
+    state update applied to a block of inputs, causal within the chunk.
     """
-    B, S, _ = x.shape  # S == 1
+    B, S, _ = x.shape
     q, k, v = _project_qkv(p, cfg, x)
     posv = _posv(pos, B)
-    q = apply_rope(q, posv[:, None], cfg.rope_theta, cfg.partial_rotary)
-    k = apply_rope(k, posv[:, None], cfg.rope_theta, cfg.partial_rotary)
+    qpos = posv[:, None] + jnp.arange(S)[None, :]            # [B, S] absolute
+    q = apply_rope(q, qpos, cfg.rope_theta, cfg.partial_rotary)
+    k = apply_rope(k, qpos, cfg.rope_theta, cfg.partial_rotary)
     bidx = jnp.arange(B)
-    ck = cache["k"].at[bidx, posv].set(k[:, 0].astype(cache["k"].dtype))
-    cv = cache["v"].at[bidx, posv].set(v[:, 0].astype(cache["v"].dtype))
+    ck = cache["k"].at[bidx[:, None], qpos].set(k.astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx[:, None], qpos].set(v.astype(cache["v"].dtype))
     T = ck.shape[1]
     kpos = jnp.arange(T)[None, None, None, :]
-    mask = kpos <= posv[:, None, None, None]
+    mask = kpos <= qpos[:, None, :, None]
     if window > 0:
-        mask &= kpos > (posv - window)[:, None, None, None]
+        mask &= kpos > (qpos - window)[:, None, :, None]
     out = _sdpa(q, ck, cv, mask, cfg.attn_logit_softcap)
     return out.reshape(B, S, -1) @ p["wo"], {"k": ck, "v": cv}
 
@@ -239,13 +242,14 @@ def mla_decode(p, cfg: ModelConfig, x, cache: PyTree, pos):
     H = cfg.n_heads
     dn, dr, dv, r = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim, cfg.kv_lora_rank
     posv = _posv(pos, B)
-    q_nope, q_rope = _mla_q(p, cfg, x, posv[:, None])
+    qpos = posv[:, None] + jnp.arange(S)[None, :]            # [B, S] absolute
+    q_nope, q_rope = _mla_q(p, cfg, x, qpos)
 
     c_new = rmsnorm(p["kv_norm"], x @ p["w_dkv"], cfg.norm_eps)
-    kr_new = apply_rope((x @ p["w_krope"]).reshape(B, S, 1, dr), posv[:, None], cfg.rope_theta)[:, :, 0]
+    kr_new = apply_rope((x @ p["w_krope"]).reshape(B, S, 1, dr), qpos, cfg.rope_theta)[:, :, 0]
     bidx = jnp.arange(B)
-    c_kv = cache["c_kv"].at[bidx, posv].set(c_new[:, 0].astype(cache["c_kv"].dtype))
-    k_rope = cache["k_rope"].at[bidx, posv].set(kr_new[:, 0].astype(cache["k_rope"].dtype))
+    c_kv = cache["c_kv"].at[bidx[:, None], qpos].set(c_new.astype(cache["c_kv"].dtype))
+    k_rope = cache["k_rope"].at[bidx[:, None], qpos].set(kr_new.astype(cache["k_rope"].dtype))
 
     w_uk = p["w_uk"].reshape(r, H, dn)
     q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
@@ -253,7 +257,7 @@ def mla_decode(p, cfg: ModelConfig, x, cache: PyTree, pos):
     s_rope = jnp.einsum("bshd,btd->bhst", q_rope.astype(jnp.float32), k_rope.astype(jnp.float32))
     scores = (s_lat + s_rope) * ((dn + dr) ** -0.5)
     T = c_kv.shape[1]
-    mask = jnp.arange(T)[None, None, None, :] <= posv[:, None, None, None]
+    mask = jnp.arange(T)[None, None, None, :] <= qpos[:, None, :, None]
     scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     o_lat = jnp.einsum("bhst,btr->bshr", probs, c_kv.astype(jnp.float32))

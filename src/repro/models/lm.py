@@ -33,6 +33,7 @@ __all__ = [
     "forward",
     "train_loss",
     "prefill",
+    "prefill_chunk",
     "decode_step",
     "init_cache",
     "param_count",
@@ -172,6 +173,27 @@ def prefill(params, cfg: ModelConfig, tokens, *, memory=None):
     """Returns (last-token logits, caches) — cache seeding for serving."""
     logits, caches, _ = forward(params, cfg, tokens, memory=memory, mode="prefill")
     return logits[:, -1], caches
+
+
+def prefill_chunk(params, cfg: ModelConfig, tokens, caches, pos, *, memory=None):
+    """Resumable prefill: one chunk of the prompt scan.
+
+    tokens [B, S_c] are applied against existing ``caches`` (the decode-layout
+    state) starting at absolute position ``pos`` — exactly the state-space
+    view of the paper: prefill is the same iteration x[k+1] = f(x[k], u[k])
+    as decode, so it can stop and resume at any step boundary.  Chaining
+    chunks from a fresh ``init_cache`` reproduces one-shot :func:`prefill`;
+    stopping after any chunk yields a checkpointed mid-prompt state that a
+    prefix cache can store and later splice into any slot.
+
+    Returns (last-token logits [B, V], updated caches).
+    """
+    x = _embed_in(params, cfg, tokens)
+    h, _, out_caches = _apply_groups(
+        params, cfg, x, memory=memory, caches=caches, pos=pos, mode="chunk"
+    )
+    logits = _head(params, cfg, h)
+    return logits[:, -1], out_caches
 
 
 def decode_step(params, cfg: ModelConfig, tokens, caches, pos, *, memory=None):

@@ -31,10 +31,15 @@ PyTree = Any
 # causal depthwise conv1d (k taps, "same" causal padding)
 # ---------------------------------------------------------------------------
 
-def causal_conv1d(x, w, b):
-    """x: [B,T,C], w: [k,C], b: [C].  y[t] = Σ_i w[i]·x[t-k+1+i] + b."""
+def causal_conv1d(x, w, b, tail=None):
+    """x: [B,T,C], w: [k,C], b: [C].  y[t] = Σ_i w[i]·x[t-k+1+i] + b.
+
+    ``tail`` ([B, k-1, C]) seeds the left context for *resumable* prefill:
+    a chunk continuation convolves against the previous chunk's trailing
+    inputs instead of zeros, so chunked == unchunked exactly."""
     k = w.shape[0]
-    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0))) if tail is None \
+        else jnp.concatenate([tail.astype(x.dtype), x], axis=1)
     y = sum(pad[:, i : i + x.shape[1]] * w[i] for i in range(k))
     return y + b
 
@@ -77,34 +82,46 @@ def mamba1_params(key, cfg: ModelConfig) -> PyTree:
     }
 
 
-def _mamba1_gather(p, cfg: ModelConfig, u):
+def _mamba1_gather(p, cfg: ModelConfig, u, conv_tail=None):
     """Shared projections: returns (x_conv, z, dt, B, C) for the scan."""
     N, R = cfg.ssm_state, cfg.dt_rank_actual
     x = u @ p["w_x"]
     z = u @ p["w_z"]
-    x = jax.nn.silu(causal_conv1d(x, p["conv_w"], p["conv_b"]))
+    x = jax.nn.silu(causal_conv1d(x, p["conv_w"], p["conv_b"], tail=conv_tail))
     dbc = x @ p["x_proj"]
     dt, B, C = dbc[..., :R], dbc[..., R : R + N], dbc[..., R + N :]
     delta = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])  # [B,T,DI]
     return x, z, delta, B, C
 
 
-def mamba1_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 256):
+def mamba1_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 256,
+                   state: PyTree | None = None):
     """Chunked selective scan (the j-step Φ form).  u: [B,T,D] → [B,T,D].
 
     Outer scan over T/chunk chunks (serial, remat-friendly); inner exact
     step-scan over the chunk (Δ is per-channel in Mamba-1, so the intra-chunk
     low-rank factorization of SSD does not apply — the chunking still bounds
     activation memory to O(chunk) and the carry to one [B,DI,N] state).
+
+    ``state`` (= the decode-layout {"h", "conv"} pytree) resumes the scan
+    mid-sequence: the h carry AND the causal-conv left context continue from
+    where the previous chunk stopped — this is what makes prefill itself a
+    resumable state-space iteration (serving's chunked prefill).
     """
     Bsz, T, _ = u.shape
     DI, N = cfg.d_inner, cfg.ssm_state
     if cfg.ssm_chunk:
         chunk = cfg.ssm_chunk
-    x, z, delta, Bm, Cm = _mamba1_gather(p, cfg, u)
+    conv_tail0 = None
+    if state is not None:
+        h0 = state["h"]
+        conv_tail0 = state["conv"]
+    x, z, delta, Bm, Cm = _mamba1_gather(p, cfg, u, conv_tail=conv_tail0)
     A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [DI,N]
 
-    if cfg.use_pallas:
+    if cfg.use_pallas and state is None:
+        # the Pallas scan kernel has no h0/conv-tail inputs; continuations
+        # take the (identical-math) jnp path below
         from repro.kernels.ssm_scan import ops as ssm_ops
 
         y, h = ssm_ops.ssm_scan(
@@ -148,6 +165,8 @@ def mamba1_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 256):
     out = y.astype(u.dtype) @ p["out_proj"]
     # Decode needs the trailing k-1 *pre-conv* inputs (XLA CSEs the re-proj).
     x_pre = u @ p["w_x"]
+    if conv_tail0 is not None:
+        x_pre = jnp.concatenate([conv_tail0.astype(x_pre.dtype), x_pre], axis=1)
     conv_tail = jnp.pad(x_pre, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))[:, -(cfg.d_conv - 1):]
     return out, {"h": h, "conv": conv_tail}
 
@@ -263,14 +282,21 @@ def _ssd_chunk(x, dt, B, C, A, h0, chunk: int):
     return y, h_last
 
 
-def mamba2_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 128):
+def mamba2_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 128,
+                   state: PyTree | None = None):
+    """``state`` (decode-layout {"h", "conv": {"x", "bc"}}) resumes the SSD
+    scan mid-sequence — chunked-prefill continuation, exact."""
     Bsz, T, _ = u.shape
     DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.n_mamba_heads, cfg.mamba_headdim
     if cfg.ssm_chunk:
         chunk = cfg.ssm_chunk
+    tail_x = tail_bc = None
+    if state is not None:
+        h0 = state["h"]
+        tail_x, tail_bc = state["conv"]["x"], state["conv"]["bc"]
     z = u @ p["w_z"]
-    x = jax.nn.silu(causal_conv1d(u @ p["w_x"], p["conv_w_x"], p["conv_b_x"]))
-    bc = jax.nn.silu(causal_conv1d(u @ p["w_bc"], p["conv_w_bc"], p["conv_b_bc"]))
+    x = jax.nn.silu(causal_conv1d(u @ p["w_x"], p["conv_w_x"], p["conv_b_x"], tail=tail_x))
+    bc = jax.nn.silu(causal_conv1d(u @ p["w_bc"], p["conv_w_bc"], p["conv_b_bc"], tail=tail_bc))
     B, C = jnp.split(bc, 2, axis=-1)
     dt = jax.nn.softplus(u @ p["w_dt"] + p["dt_bias"])         # [B,T,H]
     A = -jnp.exp(p["A_log"].astype(jnp.float32))               # [H]
@@ -282,8 +308,14 @@ def mamba2_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 128):
     y = y + x_h * p["D"][:, None].astype(jnp.float32)
     y = y.reshape(Bsz, T, DI).astype(u.dtype)
     y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
-    pad_tail = lambda t: jnp.pad(t, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))[:, -(cfg.d_conv - 1):]
-    conv_tail = {"x": pad_tail(u @ p["w_x"]), "bc": pad_tail(u @ p["w_bc"])}
+
+    def pad_tail(t, tail0):
+        if tail0 is not None:
+            t = jnp.concatenate([tail0.astype(t.dtype), t], axis=1)
+        return jnp.pad(t, ((0, 0), (cfg.d_conv - 1, 0), (0, 0)))[:, -(cfg.d_conv - 1):]
+
+    conv_tail = {"x": pad_tail(u @ p["w_x"], tail_x),
+                 "bc": pad_tail(u @ p["w_bc"], tail_bc)}
     return y @ p["out_proj"], {"h": h_last, "conv": conv_tail}
 
 

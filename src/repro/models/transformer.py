@@ -190,9 +190,18 @@ def apply_block(
     pos=None,
     mode: str = "train",
 ):
-    """One block, all kinds, all modes.  Returns (x, new_cache, aux_loss)."""
+    """One block, all kinds, all modes.  Returns (x, new_cache, aux_loss).
+
+    mode="chunk" is the *resumable prefill* step: S ≥ 1 tokens applied
+    against an existing cache at offset ``pos`` — the same state-update map
+    as decode, batched over a chunk of inputs (attention paths write the
+    chunk into the cache and mask causally; SSM/recurrent paths resume
+    their scan from the carried state).  Chaining chunks reproduces the
+    one-shot prefill trajectory.
+    """
     aux = jnp.zeros((), jnp.float32)
-    decode = mode == "decode"
+    decode = mode in ("decode", "chunk")
+    chunk = mode == "chunk"
 
     if kind in ("attn", "attn_local", "moe"):
         window = cfg.sliding_window if kind == "attn_local" else 0
@@ -209,7 +218,10 @@ def apply_block(
         else:
             if decode:
                 if kind == "attn_local":
-                    a, cache = _gqa_decode_local(p_blk["attn"], acfg, h, cache, pos)
+                    if chunk:
+                        a, cache = _gqa_local_chunk(p_blk["attn"], acfg, h, cache, pos)
+                    else:
+                        a, cache = _gqa_decode_local(p_blk["attn"], acfg, h, cache, pos)
                 else:
                     a, cache = attn_lib.gqa_decode(p_blk["attn"], acfg, h, cache, pos)
             else:
@@ -235,7 +247,9 @@ def apply_block(
         fn_pre = ssm_lib.mamba1_prefill if kind == "mamba1" else ssm_lib.mamba2_prefill
         fn_dec = ssm_lib.mamba1_decode if kind == "mamba1" else ssm_lib.mamba2_decode
         h = rmsnorm(p_blk["ln"], x, cfg.norm_eps)
-        if decode:
+        if chunk:
+            y, cache = fn_pre(p_blk["mamba"], cfg, h, state=cache)
+        elif decode:
             y, cache = fn_dec(p_blk["mamba"], cfg, h, cache)
         else:
             y, st = fn_pre(p_blk["mamba"], cfg, h)
@@ -245,7 +259,9 @@ def apply_block(
     if kind == "recurrent":
         # LSTM/GRU cell: the serving state IS the (h, c) carry (paper eq. 1)
         h = rmsnorm(p_blk["ln"], x, cfg.norm_eps)
-        if decode:
+        if chunk:
+            y, cache = rnn_lib.recurrent_prefill(p_blk["rnn"], cfg, h, state=cache)
+        elif decode:
             y, cache = rnn_lib.recurrent_decode(p_blk["rnn"], cfg, h, cache)
         else:
             y, st = rnn_lib.recurrent_prefill(p_blk["rnn"], cfg, h)
@@ -289,3 +305,43 @@ def _gqa_decode_local(p, cfg: ModelConfig, x, cache, pos):
     mask = (kpos >= 0) & (kpos >= posv[:, None] - W + 1) & (kpos <= posv[:, None])
     out = attn_lib._sdpa(q, cache["k"], cache["v"], mask[:, None, None, :], cfg.attn_logit_softcap)
     return out.reshape(B, S, -1) @ p["wo"], cache
+
+
+def _gqa_local_chunk(p, cfg: ModelConfig, x, cache, pos):
+    """Chunked-prefill step against a ring-buffer sliding-window cache.
+
+    A multi-token chunk cannot scatter-then-attend like the S=1 decode path:
+    writing the chunk's keys into the ring may overwrite positions that
+    earlier *queries of the same chunk* still need.  So attention runs over
+    the concatenation [old ring ∥ chunk keys] with absolute-position masks,
+    and only afterwards are the chunk's last min(S, W) tokens committed to
+    the ring (earlier chunk tokens are out-of-window for every future query).
+    """
+    B, S, _ = x.shape
+    q, k, v = attn_lib._project_qkv(p, cfg, x)
+    posv = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    qpos = posv[:, None] + jnp.arange(S)[None, :]                  # [B, S]
+    q = attn_lib.apply_rope(q, qpos, cfg.rope_theta, cfg.partial_rotary)
+    k = attn_lib.apply_rope(k, qpos, cfg.rope_theta, cfg.partial_rotary)
+
+    W = cache["k"].shape[1]
+    slots = jnp.arange(W)[None, :]
+    # ring slot s holds the latest already-written position p ≡ s (mod W),
+    # i.e. p ≤ pos-1; negative ⇒ never written (masked below)
+    ring_pos = (posv[:, None] - 1) - jnp.mod(posv[:, None] - 1 - slots, W)
+    kpos = jnp.concatenate(
+        [jnp.broadcast_to(ring_pos, (B, W)), qpos], axis=1)        # [B, W+S]
+    k_all = jnp.concatenate([cache["k"].astype(k.dtype), k], axis=1)
+    v_all = jnp.concatenate([cache["v"].astype(v.dtype), v], axis=1)
+    mask = (kpos[:, None, :] >= 0) & (kpos[:, None, :] <= qpos[:, :, None]) \
+        & (kpos[:, None, :] > qpos[:, :, None] - W)
+    out = attn_lib._sdpa(q, k_all, v_all, mask[:, None], cfg.attn_logit_softcap)
+
+    # commit the trailing min(S, W) chunk tokens to the ring
+    Wp = min(S, W)
+    tail_pos = qpos[:, S - Wp:]                                    # [B, Wp]
+    tail_slot = jnp.mod(tail_pos, W)
+    bidx = jnp.arange(B)[:, None]
+    ck = cache["k"].at[bidx, tail_slot].set(k[:, S - Wp:].astype(cache["k"].dtype))
+    cv = cache["v"].at[bidx, tail_slot].set(v[:, S - Wp:].astype(cache["v"].dtype))
+    return out.reshape(B, S, -1) @ p["wo"], {"k": ck, "v": cv}

@@ -1,5 +1,7 @@
 from .trainer import SimulatedFailure, StragglerMonitor, Trainer, TrainerConfig
 from .server import DecodeServer, Request, splice_cache
+from .scheduler import AsyncServer, Scheduler, SchedulerConfig
+from .prefix_cache import PrefixCache
 
 __all__ = [
     "SimulatedFailure",
@@ -9,4 +11,8 @@ __all__ = [
     "DecodeServer",
     "Request",
     "splice_cache",
+    "AsyncServer",
+    "Scheduler",
+    "SchedulerConfig",
+    "PrefixCache",
 ]

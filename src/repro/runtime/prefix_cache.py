@@ -1,0 +1,186 @@
+"""Radix-tree prefix cache over *state-space checkpoints*.
+
+The paper's central property — an iterative state-space form is resumable at
+any step boundary — is what makes prompt sharing possible at all: two
+requests with a common token prefix traverse the *identical* state
+trajectory, so the state at any shared boundary is reusable verbatim.  This
+module stores those boundary states (the full decode-layout cache pytree of
+one B=1 prefill job: KV rows, MLA latents, sliding-window rings, SSM h/conv,
+recurrent (h, c)) in a radix tree keyed on token prefixes.
+
+Unlike pure-KV prefix caches, recurrent/SSM states cannot be sliced out of a
+longer trajectory after the fact — the state at step k is only available *at*
+step k.  Chunked prefill produces exactly those intermediate states for free,
+so entries are inserted at chunk boundaries and at prompt ends:
+
+* a **full hit** (stored prefix == whole prompt) serves admission with zero
+  recomputed prompt steps — the stored last-token logits provide the first
+  sampled token;
+* a **partial hit** resumes chunked prefill from the deepest stored
+  *resumable* boundary (boundaries aligned to the chunk grid, so the resumed
+  trajectory recomputes the same chunk shapes as a cold run).
+
+Eviction is LRU under a byte budget (the on-chip-buffer-reuse lever of the
+FPGA scheduling literature applied to host/HBM cache bytes).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+
+PyTree = Any
+
+
+def tree_bytes(tree: PyTree) -> int:
+    """Total bytes of all array leaves (device or host)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        size = getattr(leaf, "size", None)
+        itemsize = getattr(getattr(leaf, "dtype", None), "itemsize", None)
+        if size is not None and itemsize is not None:
+            total += int(size) * int(itemsize)
+    return total
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """One checkpointed prefix state."""
+
+    length: int                      # prefix length in tokens (= cache pos)
+    caches: PyTree                   # B=1 decode-layout state pytree
+    logits: Any                      # last-token logits [V] (device or host)
+    resumable: bool                  # safe restart point for chunked prefill
+    nbytes: int = 0
+    last_used: int = 0
+
+    def __post_init__(self):
+        if not self.nbytes:
+            self.nbytes = tree_bytes(self.caches)
+            if self.logits is not None:
+                self.nbytes += int(self.logits.size * self.logits.dtype.itemsize)
+
+
+class _Node:
+    __slots__ = ("edge", "children", "entry")
+
+    def __init__(self, edge: tuple[int, ...] = ()):
+        self.edge = edge                       # tokens on the edge from parent
+        self.children: dict[int, _Node] = {}   # first-token -> child
+        self.entry: CacheEntry | None = None
+
+
+def _common_len(a: tuple[int, ...], b: Sequence[int]) -> int:
+    n = min(len(a), len(b))
+    i = 0
+    while i < n and a[i] == b[i]:
+        i += 1
+    return i
+
+
+class PrefixCache:
+    """Radix tree of prompt prefixes with LRU byte-budget eviction."""
+
+    def __init__(self, budget_bytes: int = 256 << 20):
+        self.budget_bytes = int(budget_bytes)
+        self.root = _Node()
+        self.bytes_in_use = 0
+        self._clock = 0
+        self._entry_nodes: set[_Node] = set()   # incremental registry — no
+        # tree walks on the admission hot path (insert/evict/telemetry)
+        self.stats = {
+            "hits": 0,            # full-prompt hits (0 prompt steps recomputed)
+            "partial_hits": 0,    # resumed mid-prompt
+            "misses": 0,
+            "insertions": 0,
+            "evictions": 0,
+            "prompt_steps_saved": 0,
+        }
+
+    # -- internal ----------------------------------------------------------
+
+    def _evict_to_budget(self) -> None:
+        while self.bytes_in_use > self.budget_bytes and self._entry_nodes:
+            node = min(self._entry_nodes, key=lambda n: n.entry.last_used)
+            self.bytes_in_use -= node.entry.nbytes
+            node.entry = None
+            self._entry_nodes.discard(node)
+            self.stats["evictions"] += 1
+
+    # -- public ------------------------------------------------------------
+
+    def insert(self, tokens: Sequence[int], caches: PyTree,
+               logits: Any = None, *, resumable: bool = True) -> None:
+        """Store the state checkpoint for prefix ``tokens`` (replaces any
+        existing entry for the same prefix)."""
+        tokens = list(int(t) for t in tokens)
+        if not tokens:
+            return
+        node, i = self.root, 0
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                child = _Node(tuple(tokens[i:]))
+                node.children[tokens[i]] = child
+                node = child
+                i = len(tokens)
+                break
+            m = _common_len(child.edge, tokens[i:])
+            if m < len(child.edge):
+                # split the edge at the divergence/end-of-prefix point
+                mid = _Node(child.edge[:m])
+                child.edge = child.edge[m:]
+                mid.children[child.edge[0]] = child
+                node.children[tokens[i]] = mid
+                child = mid
+            node, i = child, i + m
+        self._clock += 1
+        entry = CacheEntry(length=len(tokens), caches=caches, logits=logits,
+                           resumable=resumable, last_used=self._clock)
+        if node.entry is not None:
+            self.bytes_in_use -= node.entry.nbytes
+        node.entry = entry
+        self._entry_nodes.add(node)
+        self.bytes_in_use += entry.nbytes
+        self.stats["insertions"] += 1
+        self._evict_to_budget()
+
+    def lookup(self, tokens: Sequence[int]) -> list[CacheEntry]:
+        """All stored checkpoints lying on the prompt's path, deepest first.
+
+        Each returned entry satisfies ``tokens[:entry.length] == stored
+        prefix``; entry.length == len(tokens) is a full hit.  Touches the
+        returned entries' LRU clocks.  Callers record hit/miss telemetry via
+        :meth:`record_hit` / :meth:`record_miss` once they decide what to use.
+        """
+        tokens = list(int(t) for t in tokens)
+        found: list[CacheEntry] = []
+        node, i = self.root, 0
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                break
+            m = _common_len(child.edge, tokens[i:])
+            i += m
+            if m < len(child.edge):
+                break
+            if child.entry is not None:
+                self._clock += 1
+                child.entry.last_used = self._clock
+                found.append(child.entry)
+            node = child
+        return sorted(found, key=lambda e: -e.length)
+
+    def record_hit(self, steps_saved: int, *, full: bool) -> None:
+        self.stats["hits" if full else "partial_hits"] += 1
+        self.stats["prompt_steps_saved"] += int(steps_saved)
+
+    def record_miss(self) -> None:
+        self.stats["misses"] += 1
+
+    def telemetry(self) -> dict:
+        return dict(self.stats, bytes_in_use=self.bytes_in_use,
+                    budget_bytes=self.budget_bytes,
+                    entries=len(self._entry_nodes))

@@ -1,0 +1,176 @@
+"""Async request scheduler: priority classes, fairness aging, admission control.
+
+Replaces the server's FIFO deque.  The FPGA accelerator surveys (Guo et al.,
+arXiv:1712.08934; Wang et al., arXiv:1901.04988) identify *scheduling* as the
+dominant throughput lever once the datapath is fixed; on the serving side the
+datapath is the compiled decode step, and this module is that lever:
+
+* **priority classes** — smaller = more urgent; each class keeps FIFO order
+  (a deque), so the per-class head is always that class's best candidate;
+* **fairness aging** — a request's effective priority improves linearly with
+  queue wait (``aging_rate`` classes/second), so batch traffic cannot starve
+  behind a stream of interactive requests, and vice versa;
+* **admission control** — bounded queue depth and prompt-length validation
+  (reject or truncate, with the reason recorded on the request) happen at
+  submit time, *before* any device work is spent.
+
+The scheduler is synchronous and tick-driven (the server asks for the next
+admissible request whenever a slot frees up).  :class:`AsyncServer` wraps a
+``DecodeServer`` + scheduler into an asyncio front-end: ``await generate(req)``
+resolves when the request retires.  The drive loop stays cooperative because
+chunked prefill bounds the work of every tick — no await gap ever spans a
+whole long prompt.
+"""
+
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import time
+from collections import deque
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # pragma: no cover
+    from .server import DecodeServer, Request
+
+
+REJECT_QUEUE_FULL = "queue_full"
+REJECT_EMPTY_PROMPT = "empty_prompt"
+REJECT_PROMPT_TOO_LONG = "prompt_too_long"
+
+
+@dataclasses.dataclass
+class SchedulerConfig:
+    policy: str = "priority"        # "priority" | "fifo"
+    max_queue: int = 0              # admission bound; 0 = unbounded
+    aging_rate: float = 1.0         # priority classes gained per second waited
+    overflow: str = "reject"        # over-length prompts: "reject" | "truncate"
+    max_prompt_tokens: int = 0      # 0 = use the server's max_seq - 1
+
+
+class Scheduler:
+    """Priority/aging queue with admission control."""
+
+    def __init__(self, cfg: SchedulerConfig | None = None,
+                 prompt_limit: int = 0):
+        self.cfg = cfg or SchedulerConfig()
+        self.prompt_limit = self.cfg.max_prompt_tokens or prompt_limit
+        self._queues: dict[int, deque] = {}
+        self._size = 0
+        self.stats = {
+            "submitted": 0,
+            "admitted": 0,
+            "rejected": {},          # reason -> count
+            "truncated": 0,
+            "dispatched": 0,
+            "max_wait_s": 0.0,
+        }
+
+    # -- admission ---------------------------------------------------------
+
+    def admit(self, req: "Request", now: float | None = None) -> tuple[bool, str | None]:
+        """Validate and enqueue.  Returns (admitted, reject_reason)."""
+        self.stats["submitted"] += 1
+        reason = None
+        if not req.prompt:
+            reason = REJECT_EMPTY_PROMPT
+        elif self.cfg.max_queue and self._size >= self.cfg.max_queue:
+            reason = REJECT_QUEUE_FULL
+        elif self.prompt_limit and len(req.prompt) > self.prompt_limit:
+            if self.cfg.overflow == "truncate":
+                req.prompt = req.prompt[: self.prompt_limit]
+                req.truncated = True
+                self.stats["truncated"] += 1
+            else:
+                reason = REJECT_PROMPT_TOO_LONG
+        if reason is not None:
+            self.stats["rejected"][reason] = self.stats["rejected"].get(reason, 0) + 1
+            req.finish_reason = f"rejected:{reason}"
+            return False, reason
+        self.stats["admitted"] += 1
+        req.submitted_at = now if now is not None else time.perf_counter()
+        self._queues.setdefault(int(req.priority), deque()).append(req)
+        self._size += 1
+        return True, None
+
+    # -- dispatch ----------------------------------------------------------
+
+    def _effective(self, req: "Request", now: float) -> float:
+        if self.cfg.policy == "fifo":
+            return req.submitted_at
+        return req.priority - self.cfg.aging_rate * (now - req.submitted_at)
+
+    def next_request(self, now: float | None = None) -> "Request | None":
+        """Pop the best head across classes (aging-adjusted priority; FIFO
+        within a class, and FIFO overall under policy="fifo")."""
+        if not self._size:
+            return None
+        now = now if now is not None else time.perf_counter()
+        best_cls = min(
+            (c for c, q in self._queues.items() if q),
+            key=lambda c: (self._effective(self._queues[c][0], now),
+                           self._queues[c][0].submitted_at),
+        )
+        req = self._queues[best_cls].popleft()
+        self._size -= 1
+        self.stats["dispatched"] += 1
+        self.stats["max_wait_s"] = max(self.stats["max_wait_s"],
+                                       now - req.submitted_at)
+        return req
+
+    def __len__(self) -> int:
+        return self._size
+
+    def telemetry(self) -> dict:
+        return dict(self.stats, pending=self._size,
+                    policy=self.cfg.policy, aging_rate=self.cfg.aging_rate)
+
+
+class AsyncServer:
+    """asyncio front-end over a :class:`DecodeServer`.
+
+    Submissions arrive concurrently (``await generate(req)``); a single drive
+    task advances the server one tick at a time — each tick is one bounded
+    unit of device work (≤ one prefill chunk + one decode dispatch), so the
+    event loop regains control at a latency bounded by the chunk size rather
+    than by the longest prompt in flight.
+    """
+
+    def __init__(self, server: "DecodeServer", idle_sleep: float = 0.001):
+        self.server = server
+        self.idle_sleep = idle_sleep
+        self._futures: dict[int, asyncio.Future] = {}
+        self._drained = 0            # completed-list watermark
+        self._driver: asyncio.Task | None = None
+
+    def _collect(self) -> None:
+        done = self.server.completed
+        for req in done[self._drained:]:
+            fut = self._futures.pop(req.uid, None)
+            if fut is not None and not fut.done():
+                fut.set_result(req)
+        self._drained = len(done)
+
+    async def generate(self, req: "Request") -> "Request":
+        fut = asyncio.get_running_loop().create_future()
+        self._futures[req.uid] = fut
+        self.server.submit(req)
+        self._collect()              # instant rejection resolves immediately
+        if self._driver is None or self._driver.done():
+            self._driver = asyncio.ensure_future(self._drive())
+        return await fut
+
+    async def _drive(self) -> None:
+        try:
+            while self._futures:
+                busy = self.server.tick()
+                self._collect()
+                await asyncio.sleep(0 if busy else self.idle_sleep)
+        except BaseException as exc:
+            # fail every pending generate() — a dead driver must never leave
+            # callers awaiting forever on an unobserved exception
+            for fut in self._futures.values():
+                if not fut.done():
+                    fut.set_exception(exc)
+            self._futures.clear()
+            raise

@@ -20,13 +20,28 @@ Two decode drivers share the slot machinery:
   hot path is dispatch-bound, not sync-bound.  The cache carry layout is
   exactly the ``splice_cache`` layout, so admission between blocks is
   unchanged.
+
+Prefill is the paper's resumable iteration, and the production levers fall
+out of that:
+
+* **chunked prefill** (``prefill_chunk=N``) — a prompt is consumed N tokens
+  per tick through ``lm.prefill_chunk`` (the same state update as decode,
+  batched over a chunk), interleaved with decode ticks; a long prompt never
+  head-of-line-blocks live slots, and every tick's device work is bounded by
+  one chunk + one decode dispatch.
+* **radix prefix cache** (``prefix_cache_bytes``) — chunk-boundary states are
+  checkpointed into a :class:`~repro.runtime.prefix_cache.PrefixCache`;
+  admissions sharing a stored prefix splice the checkpoint instead of
+  recomputing shared prompt FLOPs (a full hit recomputes zero prompt steps).
+* **scheduler** — admission control, priority classes, and fairness aging
+  live in :class:`~repro.runtime.scheduler.Scheduler`, which replaces the
+  FIFO deque.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from collections import deque
 from typing import Any, Callable
 
 import jax
@@ -36,12 +51,18 @@ import numpy as np
 from repro.models import lm
 from repro.models.config import ModelConfig
 
+from .prefix_cache import PrefixCache
+from .scheduler import Scheduler, SchedulerConfig
+
 PyTree = Any
 
 DEFAULT_BLOCK_K = 8
 
+_SEQ_LEAVES = ("k", "v", "c_kv", "k_rope")
 
-def splice_cache(caches: PyTree, prefill_caches: PyTree, b: int, plen: int) -> PyTree:
+
+def splice_cache(caches: PyTree, prefill_caches: PyTree, b: int, plen: int,
+                 max_seq: int | None = None) -> PyTree:
     """Insert a B=1 prefill cache into batch slot ``b`` of the server cache.
 
     Handles: full-length KV ([G,1,L,..] → [G,B,S_max,..] left-aligned), MLA
@@ -50,6 +71,13 @@ def splice_cache(caches: PyTree, prefill_caches: PyTree, b: int, plen: int) -> P
     LSTM/GRU ``(h, c)`` carries ([G,1,..] → batch row b): a recurrent carry
     has no sequence axis, so admission is a pure batch-row write and new
     requests never disturb other slots' streams.
+
+    The ``p mod W`` wrap applies ONLY to sliding-window ring buffers, i.e.
+    destinations shorter than ``max_seq``.  An over-length source against a
+    *full-attention* destination (L > S_dst == max_seq) raises — admission
+    must reject or truncate such prompts, because wrapping a full cache
+    would silently corrupt the slot (early positions overwritten by late
+    ones while the causal mask still exposes every position).
     """
 
     def one(path, dst, src):
@@ -57,11 +85,18 @@ def splice_cache(caches: PyTree, prefill_caches: PyTree, b: int, plen: int) -> P
         if src is None or (hasattr(src, "ndim") and src.ndim == 0):
             return dst
         if src.ndim >= 3 and dst.ndim == src.ndim and src.shape[2] != dst.shape[2] \
-                and name.split("/")[-1] in ("k", "v", "c_kv", "k_rope"):
+                and name.split("/")[-1] in _SEQ_LEAVES:
             # sequence-bearing cache: [G, 1, L, ...] -> [G, B, S_dst, ...]
             L, S_dst = src.shape[2], dst.shape[2]
             if L <= S_dst:
                 return dst.at[:, b, :L].set(src[:, 0].astype(dst.dtype))
+            if max_seq is None or S_dst >= max_seq:
+                raise ValueError(
+                    f"splice_cache: prompt of length {L} overflows the "
+                    f"full-attention cache leaf '{name}' (S_max={S_dst}); "
+                    "admission must reject or truncate — only sliding-window "
+                    "ring buffers may wrap."
+                )
             # ring buffer (sliding window): keep last S_dst, map p -> p mod W
             W = S_dst
             tail = src[:, 0, L - W:]                     # positions L-W .. L-1
@@ -83,70 +118,280 @@ class Request:
     prompt: list[int]
     max_new_tokens: int = 16
     temperature: float = 0.0   # 0 = greedy
+    priority: int = 1          # scheduler class; smaller = more urgent
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     first_token_at: float | None = None
     done_at: float | None = None
+    finish_reason: str | None = None
+    truncated: bool = False     # prompt cut to the admission limit
+    prefix_hit_tokens: int = 0  # prompt steps served from the prefix cache
+
+
+@dataclasses.dataclass
+class _PrefillJob:
+    """A resumable prompt scan bound to a reserved slot."""
+
+    req: Request
+    slot: int
+    caches: PyTree            # B=1, S_max decode-layout state
+    pos: int = 0              # prompt tokens consumed so far
+    logits: Any = None        # last-token logits of the latest chunk (device)
 
 
 class DecodeServer:
     def __init__(self, cfg: ModelConfig, params: PyTree, num_slots: int, max_seq: int,
                  eos_id: int | None = None, seed: int = 0,
-                 block_k: int = DEFAULT_BLOCK_K, persistent: bool = False):
+                 block_k: int = DEFAULT_BLOCK_K, persistent: bool = False,
+                 prefill_chunk: int = 0,
+                 prefix_cache_bytes: int = 0,
+                 scheduler: Scheduler | SchedulerConfig | None = None,
+                 prefill_chunks_per_tick: int = 1):
         self.cfg, self.params = cfg, params
         self.B, self.S = num_slots, max_seq
         self.eos_id = eos_id
         self.block_k = block_k
         self.persistent = persistent
+        self.prefill_chunk = int(prefill_chunk)
+        self.prefill_chunks_per_tick = max(1, int(prefill_chunks_per_tick))
+        self.prefix_cache = (PrefixCache(prefix_cache_bytes)
+                             if prefix_cache_bytes else None)
+        if isinstance(scheduler, Scheduler):
+            self.scheduler = scheduler
+            self.scheduler.prompt_limit = self.scheduler.prompt_limit or (max_seq - 1)
+        else:
+            self.scheduler = Scheduler(scheduler, prompt_limit=max_seq - 1)
         self.caches = lm.init_cache(cfg, num_slots, max_seq)
         self.pos = np.zeros(num_slots, np.int32)        # next write position
         self.live = np.zeros(num_slots, bool)
+        self.reserved = np.zeros(num_slots, bool)       # prefill job in flight
         self.slot_req: list[Request | None] = [None] * num_slots
         self.cur_tokens = np.zeros(num_slots, np.int32)
-        self.queue: deque[Request] = deque()
         self.completed: list[Request] = []
         self.key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(
             lambda p, t, c, pos: lm.decode_step(p, cfg, t, c, pos)
         )
         self._prefill = jax.jit(lambda p, t: lm.prefill(p, cfg, t))
+        self._chunk_fns: dict[int, Callable] = {}       # chunk len -> jitted
         self._block_fns: dict[int, Callable] = {}       # K -> jitted K-step loop
+        self._jobs: list[_PrefillJob] = []
+        self._job_rr = 0                                # round-robin cursor
         # decode-phase telemetry (prefill excluded): the acceptance metric is
         # host round-trips per generated token.  Both modes amortize over the
         # live slots, so step() reports ~1/live and step_block() ~1/(K·live);
         # at equal occupancy the persistent/legacy ratio is the K× win.
         self.decode_syncs = 0
         self.decoded_tokens = 0
+        # prefill-phase telemetry: per-tick boundedness + cache savings
+        self.prompt_steps_computed = 0
+        self.prefill_chunks_run = 0
+        self.max_prompt_steps_per_tick = 0
+        self._tick_prompt_steps = 0
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request) -> None:
-        req.submitted_at = time.perf_counter()
-        self.queue.append(req)
+    # admission
+    # ------------------------------------------------------------------
+
+    def submit(self, req: Request) -> bool:
+        """Admission-controlled enqueue.  Rejected requests complete
+        immediately with ``finish_reason='rejected:<reason>'``."""
+        now = time.perf_counter()
+        req.submitted_at = now
+        admitted, _reason = self.scheduler.admit(req, now=now)
+        if not admitted:
+            req.done_at = now
+            self.completed.append(req)
+        return admitted
+
+    def _free_slot(self) -> int | None:
+        for b in range(self.B):
+            if not self.live[b] and not self.reserved[b]:
+                return b
+        return None
+
+    def _retire(self, req: Request, now: float, reason: str) -> None:
+        req.done_at = now
+        req.finish_reason = req.finish_reason or reason
+        self.completed.append(req)
+
+    def _start_request(self, req: Request, b: int, first_logits: np.ndarray) -> None:
+        """Go live after the prompt state is in slot ``b`` — or retire at
+        admission when the token budget is already met by the prefill-sampled
+        first token (the max_new_tokens=1 off-by-one fix)."""
+        first = int(np.argmax(first_logits))
+        now = time.perf_counter()
+        req.out_tokens.append(first)
+        req.first_token_at = now
+        hit_eos = self.eos_id is not None and first == self.eos_id
+        if len(req.out_tokens) >= req.max_new_tokens or hit_eos:
+            self._retire(req, now, "eos" if hit_eos else "max_tokens")
+            return
+        self.slot_req[b] = req
+        self.live[b] = True
+        self.pos[b] = len(req.prompt)
+        self.cur_tokens[b] = first
+
+    def _chunk_fn(self, c: int) -> Callable:
+        fn = self._chunk_fns.get(c)
+        if fn is None:
+            cfg = self.cfg
+            fn = self._chunk_fns[c] = jax.jit(
+                lambda p, t, cc, pos: lm.prefill_chunk(p, cfg, t, cc, pos)
+            )
+        return fn
+
+    def _cache_boundary(self, job: _PrefillJob) -> None:
+        """Checkpoint the job's current state into the prefix cache.  Only
+        chunk-grid-aligned boundaries are resumable (a resumed scan then
+        recomputes the same chunk shapes as a cold run); the prompt-end
+        boundary additionally carries last-token logits for full hits."""
+        if self.prefix_cache is None or job.pos == 0:
+            return
+        aligned = self.prefill_chunk > 0 and job.pos % self.prefill_chunk == 0
+        self.prefix_cache.insert(
+            job.req.prompt[: job.pos],
+            self._slice_prefix(job.caches, job.pos),
+            logits=job.logits[0] if job.logits is not None else None,
+            resumable=aligned,
+        )
+
+    def _slice_prefix(self, caches: PyTree, p: int) -> PyTree:
+        """Trim full-attention KV leaves to the first ``p`` rows so stored
+        checkpoints cost O(prefix), not O(S_max); window rings and
+        recurrent/SSM states are position-free or ring-complete and stored
+        as-is."""
+        S = self.S
+
+        def one(path, leaf):
+            name = str(getattr(path[-1], "key", path[-1]))
+            if hasattr(leaf, "ndim") and leaf.ndim >= 3 \
+                    and name in _SEQ_LEAVES and leaf.shape[2] == S:
+                return leaf[:, :, :p]
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(one, caches)
+
+    def _inflate_entry(self, entry) -> PyTree:
+        """Re-expand a stored checkpoint to a full B=1, S_max cache."""
+        fresh = lm.init_cache(self.cfg, 1, self.S)
+        return splice_cache(fresh, entry.caches, 0, entry.length, self.S)
 
     def _admit(self) -> None:
-        """Fill free slots: run a B=1 prefill for the prompt and SPLICE the
-        resulting caches/states into the slot — the production
-        continuous-batching pattern (separate prefill program, shared decode
-        program; other slots' recurrent states are untouched)."""
-        for b in range(self.B):
-            if self.live[b] or not self.queue:
+        """Fill free slots from the scheduler.  Admission is a prefix-cache
+        lookup first: a full hit splices the stored state (0 recomputed
+        prompt steps); a partial hit resumes chunked prefill mid-prompt;
+        a miss starts a prefill job (chunked) or runs the one-shot B=1
+        prefill (legacy), then SPLICES the resulting state into the slot —
+        the production continuous-batching pattern (separate prefill
+        program, shared decode program; other slots' states are untouched).
+        """
+        while True:
+            b = self._free_slot()
+            if b is None:
+                return
+            req = self.scheduler.next_request()
+            if req is None:
+                return
+            now = time.perf_counter()
+            if req.max_new_tokens <= 0:
+                # budget already met: retire before spending any device work
+                self._retire(req, now, "max_tokens")
                 continue
-            req = self.queue.popleft()
+            plen = len(req.prompt)
+
+            entry = None
+            if self.prefix_cache is not None:
+                candidates = self.prefix_cache.lookup(req.prompt)
+                full = next((e for e in candidates
+                             if e.length == plen and e.logits is not None), None)
+                if full is not None:
+                    self.caches = splice_cache(self.caches, full.caches, b,
+                                               plen, self.S)
+                    req.prefix_hit_tokens = plen
+                    self.prefix_cache.record_hit(plen, full=True)
+                    self._start_request(req, b, np.asarray(full.logits))
+                    continue
+                if self.prefill_chunk > 0:
+                    entry = next((e for e in candidates if e.resumable), None)
+
+            if self.prefill_chunk > 0:
+                caches = (self._inflate_entry(entry) if entry is not None
+                          else lm.init_cache(self.cfg, 1, self.S))
+                start = entry.length if entry is not None else 0
+                if self.prefix_cache is not None:
+                    if entry is not None:
+                        req.prefix_hit_tokens = start
+                        self.prefix_cache.record_hit(start, full=False)
+                    else:
+                        self.prefix_cache.record_miss()
+                self.reserved[b] = True
+                self._jobs.append(_PrefillJob(req=req, slot=b, caches=caches,
+                                              pos=start))
+                continue
+
+            # legacy one-shot prefill
+            if self.prefix_cache is not None:
+                self.prefix_cache.record_miss()
             toks = jnp.asarray(np.array(req.prompt, np.int32)[None])
             logits, pc = self._prefill(self.params, toks)
-            self.caches = splice_cache(self.caches, pc, b, len(req.prompt))
-            first = int(np.argmax(np.asarray(logits[0])))
-            now = time.perf_counter()
-            req.out_tokens.append(first)
-            req.first_token_at = now
-            self.slot_req[b] = req
-            self.live[b] = True
-            self.pos[b] = len(req.prompt)
-            self.cur_tokens[b] = first
+            self.prompt_steps_computed += plen
+            self._tick_prompt_steps += plen
+            self.caches = splice_cache(self.caches, pc, b, plen, self.S)
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert(req.prompt, pc, logits=logits[0],
+                                         resumable=False)
+            self._start_request(req, b, np.asarray(logits[0]))
+
+    # ------------------------------------------------------------------
+    # chunked prefill
+    # ------------------------------------------------------------------
+
+    def _advance_prefill(self) -> None:
+        """Advance at most ``prefill_chunks_per_tick`` chunks, round-robin
+        over in-flight jobs — the per-tick device work stays bounded by
+        chunks·chunk_size prompt tokens regardless of prompt length."""
+        for _ in range(self.prefill_chunks_per_tick):
+            if not self._jobs:
+                return
+            self._job_rr %= len(self._jobs)
+            job = self._jobs[self._job_rr]
+            plen = len(job.req.prompt)
+            c = min(self.prefill_chunk, plen - job.pos)
+            toks = jnp.asarray(
+                np.array(job.req.prompt[job.pos:job.pos + c], np.int32)[None])
+            job.logits, job.caches = self._chunk_fn(c)(
+                self.params, toks, job.caches, jnp.int32(job.pos))
+            job.pos += c
+            self.prompt_steps_computed += c
+            self._tick_prompt_steps += c
+            self.prefill_chunks_run += 1
+            self._cache_boundary(job)
+            if job.pos >= plen:
+                self._jobs.remove(job)
+                self.caches = splice_cache(self.caches, job.caches, job.slot,
+                                           plen, self.S)
+                self.reserved[job.slot] = False
+                self._start_request(job.req, job.slot,
+                                    np.asarray(job.logits[0]))
+            else:
+                self._job_rr += 1
+
+    def _begin_tick(self) -> None:
+        self._tick_prompt_steps = 0
+        self._admit()
+        self._advance_prefill()
+        self._admit()   # full-hit admissions may free the tick for decode
+        self.max_prompt_steps_per_tick = max(self.max_prompt_steps_per_tick,
+                                             self._tick_prompt_steps)
+
+    # ------------------------------------------------------------------
+    # decode drivers
+    # ------------------------------------------------------------------
 
     def step(self) -> int:
         """One batched decode tick for all live slots.  Returns #live."""
-        self._admit()
+        self._begin_tick()
         if not self.live.any():
             return 0
         toks = jnp.asarray(self.cur_tokens[:, None])
@@ -164,6 +409,10 @@ class DecodeServer:
             if req.temperature > 0:
                 self.key, sub = jax.random.split(self.key)
                 nxt = int(jax.random.categorical(sub, jnp.asarray(logits[b]) / req.temperature))
+                # the int() above is its own host↔device round-trip (the
+                # sampled id travels back) — count it, or the legacy-vs-
+                # persistent sync comparison flatters the legacy path
+                self.decode_syncs += 1
             else:
                 nxt = int(np.argmax(logits[b]))
             req.out_tokens.append(nxt)
@@ -175,8 +424,9 @@ class DecodeServer:
             hit_eos = self.eos_id is not None and nxt == self.eos_id
             oom = self.pos[b] >= self.S - 1
             if full or hit_eos or oom:
-                req.done_at = now
-                self.completed.append(req)
+                self._retire(req, now,
+                             "eos" if hit_eos else
+                             ("max_tokens" if full else "out_of_cache"))
                 self.live[b] = False
                 self.slot_req[b] = None
         return int(self.live.sum())
@@ -234,7 +484,7 @@ class DecodeServer:
         this path removes — so per-request latency is quantized up to K-1
         device ticks coarser than the per-token driver reports.
         """
-        self._admit()
+        self._begin_tick()
         if not self.live.any():
             return 0
         k = self.block_k
@@ -272,27 +522,53 @@ class DecodeServer:
                 if req.first_token_at is None:
                     req.first_token_at = now
                 if done_now[t, b]:
-                    req.done_at = now
-                    self.completed.append(req)
+                    nxt = int(toks[t, b])
+                    reason = ("eos" if (self.eos_id is not None
+                                        and nxt == self.eos_id) else
+                              ("max_tokens"
+                               if len(req.out_tokens) >= req.max_new_tokens
+                               else "out_of_cache"))
+                    self._retire(req, now, reason)
                     self.slot_req[b] = None
         return int(self.live.sum())
 
     # ------------------------------------------------------------------
+    def tick(self) -> bool:
+        """One scheduling quantum (prefill chunks + decode); True if the
+        server still has work in flight."""
+        if self.persistent:
+            self.step_block()
+        else:
+            self.step()
+        return bool(self.live.any() or self._jobs or len(self.scheduler))
+
     def stats(self) -> dict:
-        """Decode-phase telemetry: host round-trips per generated token."""
+        """Serving telemetry: decode host round-trips per generated token,
+        prefill boundedness, prefix-cache hit/miss/eviction, scheduler."""
         toks = max(self.decoded_tokens, 1)
-        return {
+        out = {
             "decode_syncs": self.decode_syncs,
             "decoded_tokens": self.decoded_tokens,
             "syncs_per_token": self.decode_syncs / toks,
+            "prefill": {
+                "prompt_steps_computed": self.prompt_steps_computed,
+                "chunks_run": self.prefill_chunks_run,
+                "chunk_size": self.prefill_chunk,
+                "max_prompt_steps_per_tick": self.max_prompt_steps_per_tick,
+            },
+            "scheduler": self.scheduler.telemetry(),
         }
+        if self.prefix_cache is not None:
+            out["prefix_cache"] = self.prefix_cache.telemetry()
+        return out
 
     def run_until_drained(self, max_ticks: int = 10_000,
                           persistent: bool | None = None) -> list[Request]:
         use_block = self.persistent if persistent is None else persistent
         step = self.step_block if use_block else self.step
         ticks = 0
-        while (self.queue or self.live.any()) and ticks < max_ticks:
+        while (len(self.scheduler) or self._jobs or self.live.any()) \
+                and ticks < max_ticks:
             step()
             ticks += 1
         return self.completed

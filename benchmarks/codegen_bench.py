@@ -74,13 +74,31 @@ def _generated_cell_us(spec: NetworkSpec):
     return time_call(lambda: run(consts, x0, us), warmup=2, iters=5)
 
 
+def _rtlsim_stats(spec: NetworkSpec, width: int = 16):
+    """Time the bit-accurate RTL simulator (the Verilog oracle) and report
+    the emitted controller's FSM cycle count — the Fig. 10 timing figure an
+    actual synthesis run would check against."""
+    import numpy as np
+
+    from repro.codegen import build_program, rtlsim
+
+    prog = build_program(spec)
+    u = np.asarray(_input(spec))
+    sim = rtlsim.simulate(prog, u, width=width)  # doubles as the warmup run
+    t_us = time_call(lambda: rtlsim.simulate(prog, u, width=width),
+                     warmup=0, iters=3)
+    return t_us, sim.cycles
+
+
 def run(out_dir: str = "experiments") -> list[dict]:
     rows = []
     for label, spec in SWEEP:
         px, fx = compile_spec(spec, backend="xla")
         t_xla = time_call(jax.jit(fx), px, _input(spec), warmup=1, iters=3)
+        t_sim, fsm_cycles = _rtlsim_stats(spec)
         row = {"name": label, "cell": spec.cell, "batch": BATCH,
-               "steps": spec.serial_steps, "xla_us": round(t_xla, 1)}
+               "steps": spec.serial_steps, "xla_us": round(t_xla, 1),
+               "rtlsim_us": round(t_sim, 1), "fsm_cycles": fsm_cycles}
         if spec.cell != "mlp":
             t_gen = _generated_cell_us(spec)
             row["generated_us"] = round(t_gen, 1)

@@ -28,7 +28,7 @@ from .builders import (
 )
 from .ir import DatapathGraph, GraphBuilder, Node, Program, Schedule, Stage, eval_graph
 from .verilog import ResourceReport, emit_program, report_program
-from . import pallas_backend, verilog, xla_backend
+from . import pallas_backend, rtlsim, verilog, xla_backend
 
 BACKENDS = ("xla", "pallas", "verilog")
 
@@ -70,6 +70,7 @@ __all__ = [
     "register_cell",
     "registered_cells",
     "report_program",
+    "rtlsim",
     "ssm_params",
     "verilog",
     "xla_backend",

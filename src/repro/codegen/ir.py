@@ -106,15 +106,53 @@ class DatapathGraph:
             if n.name in seen:
                 raise ValueError(f"duplicate node name '{n.name}'")
             seen.add(n.name)
+            self._check_widths(n)
         for reg, src in self.updates.items():
             if reg not in self.states:
                 raise ValueError(f"update of unknown register '{reg}'")
             if src not in seen:
                 raise ValueError(f"register '{reg}' written from unknown node '{src}'")
+            if self.node(src).width != self.states[reg]:
+                raise ValueError(
+                    f"register '{reg}' ({self.states[reg]} lanes) written "
+                    f"from '{src}' ({self.node(src).width} lanes)")
         if set(self.updates) != set(self.states):
             raise ValueError("every state register needs exactly one write-back")
         if self.output is not None and self.output not in seen:
             raise ValueError(f"output node '{self.output}' undefined")
+
+    def _check_widths(self, n: Node) -> None:
+        """Bus-width agreement — what the per-lane RTL emission and the
+        bit-accurate simulators assume.  Elementwise ops are lane-aligned,
+        slices in-range, concat the sum of its parts, MACC ports matched to
+        the coefficient ROM shape."""
+        w_in = [self.node(i).width for i in n.inputs]
+        if n.op in ("add", "sub", "mul"):
+            if not (n.width == w_in[0] == w_in[1]):
+                raise ValueError(
+                    f"node '{n.name}' ({n.op}): lane widths differ "
+                    f"({n.width} vs {w_in})")
+        elif n.op == "af":
+            if n.width != w_in[0]:
+                raise ValueError(f"af '{n.name}': width {n.width} != input {w_in[0]}")
+        elif n.op == "concat":
+            if n.width != sum(w_in):
+                raise ValueError(f"concat '{n.name}': width {n.width} != {sum(w_in)}")
+        elif n.op == "slice":
+            a, b = n.attr("start"), n.attr("stop")
+            if not (0 <= a < b <= w_in[0] and n.width == b - a):
+                raise ValueError(
+                    f"slice '{n.name}': [{a}:{b}] out of range for {w_in[0]}")
+        elif n.op == "macc":
+            w = self.node(n.inputs[1])
+            if w.op == "const":
+                shape = w.attr("shape")
+                if len(shape) == 2 and (shape[0] != w_in[0] or shape[1] != n.width):
+                    raise ValueError(
+                        f"macc '{n.name}': ROM {shape} mismatches "
+                        f"{w_in[0]}->{n.width}")
+            if len(n.inputs) == 3 and self.node(n.inputs[2]).width != n.width:
+                raise ValueError(f"macc '{n.name}': bias width mismatch")
 
     # -- structural queries used by the backends / resource report ------------
     def consts(self, per_step: bool | None = None) -> list[Node]:
@@ -243,6 +281,14 @@ class Program:
     def validate(self) -> None:
         if not self.stages:
             raise ValueError("program has no stages")
+        if self.beta is not None and len(self.stages) != 1:
+            # every backend (XLA, Pallas, Verilog top module, rtlsim, the
+            # fixed-point golden model) realizes the βuδ[k] injection as the
+            # single stage's loaded state — a multi-stage beta program has
+            # no defined cascade semantics, so reject it loudly here
+            raise ValueError(
+                f"beta-injection programs must have exactly 1 stage, "
+                f"got {len(self.stages)}")
         for st in self.stages:
             st.validate()
         if self.readout_state not in self.stages[-1].graph.states:

@@ -279,6 +279,26 @@ def _bus(node_name: str) -> str:
     return f"w_{node_name}"
 
 
+def _macc_port_uses(g: DatapathGraph) -> set[str]:
+    """Const names consumed ONLY through Create_Layer ports (weight/bias
+    ROMs) — these never need a datapath bus; everything else does.  A macc
+    node's inputs[0] is its x_bus DATA port, so it counts as 'elsewhere':
+    a const feeding it still needs a materialized bus."""
+    macc_ins = {i for n in g.macc_nodes() for i in n.inputs[1:]}
+    elsewhere = {i for n in g.nodes for j, i in enumerate(n.inputs)
+                 if not (n.op == "macc" and j >= 1)}
+    return macc_ins - elsewhere
+
+
+def _const_bus(node, words: list[int], width: int) -> str:
+    """An elementwise const as a constant bus: lane i carries word i (lane 0
+    in the LSBs, so the concatenation lists words MSB-first)."""
+    hexw = (width + 3) // 4
+    lanes = ", ".join(f"{width}'h{w:0{hexw}x}" for w in reversed(words))
+    return (f"  wire signed [{node.width}*WIDTH-1:0] {_bus(node.name)} = "
+            f"{{{lanes}}};")
+
+
 def create_datapath(stage: Stage, width: int) -> str:
     """One combinational-plus-MACC datapath module wired node-for-node from
     the IR graph; state registers are the module's sequential elements."""
@@ -295,6 +315,8 @@ def create_datapath(stage: Stage, width: int) -> str:
     if g.output is not None:
         ports.append(f"  output wire signed [{g.node(g.output).width}*WIDTH-1:0] y_bus,")
     ports.append("  output wire step_done")
+    fmt = FixedPointFormat(total_bits=width, frac_bits=width - 4)
+    rom_only = _macc_port_uses(g)
     body: list[str] = []
     dones: list[str] = []
     for n in g.nodes:
@@ -309,6 +331,16 @@ def create_datapath(stage: Stage, width: int) -> str:
             shape = "x".join(str(d) for d in n.attr("shape"))
             body.append(f"  // const ROM '{n.name}' [{shape}]"
                         + (" (per-step pages)" if n.attr("per_step") else ""))
+            if n.name not in rom_only:
+                # consumed by gate algebra: materialize a constant bus
+                # (Create_Layer ports read the coefficient ROMs directly)
+                if n.attr("per_step"):
+                    raise NotImplementedError(
+                        f"per-step const '{n.name}' feeds an elementwise op; "
+                        "only MACC ports may read per-step ROM pages")
+                body.append(_const_bus(
+                    n, _quantize_words(np.asarray(stage.params[n.name]), fmt),
+                    width))
         elif n.op == "macc":
             has_b = len(n.inputs) == 3
             in_w = g.node(n.inputs[0]).width
@@ -347,10 +379,29 @@ def create_datapath(stage: Stage, width: int) -> str:
             body.append(f"{decl}  assign {wn} = "
                         f"{_bus(n.inputs[0])}[{a}*WIDTH +: {(b - a)}*WIDTH];")
         elif n.op in ("add", "sub", "mul"):
+            # per-lane arithmetic: a whole-bus assign would bleed carries
+            # across lane boundaries (and bus-wide * is not lane-wise at all)
             op = {"add": "+", "sub": "-", "mul": "*"}[n.op]
+            ei = f"ei_{n.name}"
+            a = f"{_bus(n.inputs[0])}[{ei}*WIDTH +: WIDTH]"
+            b = f"{_bus(n.inputs[1])}[{ei}*WIDTH +: WIDTH]"
+            if n.op == "mul":
+                # Q-align the 2W-bit lane product with the MACC's select
+                lane = (f"      wire signed [2*WIDTH-1:0] p = "
+                        f"$signed({a}) {op} $signed({b});\n"
+                        f"      assign {wn}[{ei}*WIDTH +: WIDTH] = "
+                        f"p[2*WIDTH-1-4 -: WIDTH];")
+            else:
+                lane = (f"      assign {wn}[{ei}*WIDTH +: WIDTH] = "
+                        f"$signed({a}) {op} $signed({b});")
             body.append(
                 f"{decl}  // elementwise {n.op}, {n.width} VPU lanes\n"
-                f"  assign {wn} = {_bus(n.inputs[0])} {op} {_bus(n.inputs[1])};")
+                f"  genvar {ei};\n"
+                f"  generate\n"
+                f"    for ({ei} = 0; {ei} < {n.width}; {ei} = {ei} + 1)"
+                f" begin : ew_{n.name}\n"
+                f"{lane}\n"
+                f"    end\n  endgenerate")
     # register load (FSM S_LOAD) / write-back (every completed step)
     ld = "\n".join(f"      r_{s} <= {s}_init;" for s in sorted(g.states))
     wb = "\n".join(f"      r_{s} <= {_bus(src)};"
@@ -567,6 +618,10 @@ def emit_program(program: Program) -> str:
     program.validate()
     spec = program.spec
     width = spec.quant_bits or DEFAULT_WIDTH
+    if width < 8 or width > 32:
+        raise ValueError(
+            f"verilog backend requires 8 <= quant_bits <= 32 (AF addr select "
+            f"reads bits [WIDTH-2 -: {AF_ADDR_BITS}]); got {width}")
     parts = [
         f"// Generated by repro.codegen (paper Table I) — spec {spec.name}",
         f"// cell={spec.cell} steps={sum(st.schedule.steps for st in program.stages)} "

@@ -210,8 +210,24 @@ class SynthesisReport:
 
 
 # Memoization: Fig. 10-style sweeps re-synthesize identical specs; one trace +
-# compile per (spec, batch, backend) is enough.  NetworkSpec is frozen/hashable.
+# compile per cache key is enough.  NetworkSpec is frozen/hashable.
 _SYNTH_CACHE: dict[tuple, SynthesisReport] = {}
+
+
+def _cache_key(spec: NetworkSpec, batch: int | None, backend: str,
+               double_buffer: bool) -> tuple:
+    """EVERY knob that changes the compiled artifact must appear here.
+
+    ``spec`` is a frozen dataclass, so its hash covers the shape knobs AND
+    ``quant_bits`` (which derives the pallas lut/int8-MACC modes — the
+    ``int8_macc`` flag is ``backend=="pallas" and quant_bits<=8``, a pure
+    function of key fields, so it cannot alias).  ``double_buffer`` only
+    exists on the pallas backend; normalize it for the others so an
+    xla/verilog call can't fork the cache on an irrelevant flag.
+    """
+    if backend != "pallas":
+        double_buffer = True
+    return (spec, batch, backend, double_buffer)
 
 
 def synthesize_cache_clear() -> None:
@@ -272,10 +288,12 @@ def _analyze_compiled(fwd, params, u: jax.ShapeDtypeStruct):
     compiled = lowered.compile()
     t2 = time.perf_counter()
     try:
-        cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
-            cost = cost[0]
-        flops = float(cost.get("flops", float("nan")))
+        from repro.kernels._compat import first_cost_analysis
+
+        cost = first_cost_analysis(compiled)
+        # None (not NaN) when the backend reports nothing — keeps the
+        # `if flops` / `is None` consumers honest (NaN is truthy)
+        flops = float(cost["flops"]) if "flops" in cost else None
     except Exception:
         flops = None
     try:
@@ -289,21 +307,23 @@ def _analyze_compiled(fwd, params, u: jax.ShapeDtypeStruct):
 
 
 def synthesize(spec: NetworkSpec, batch: int | None = None,
-               backend: str = "xla") -> SynthesisReport:
+               backend: str = "xla", *,
+               double_buffer: bool = True) -> SynthesisReport:
     """spec → IR program → {XLA scan, fused Pallas kernel, Verilog RTL}.
 
     All backends consume the same :mod:`repro.codegen` program, so
     ``backend="xla"`` and ``backend="pallas"`` are output-equivalent and
     ``backend="verilog"`` additionally attaches the Table-I RTL text plus a
     resource report cross-checked against ``compiled.cost_analysis()``.
-    Results are memoized by ``(spec, batch, backend)``.
+    ``double_buffer`` forwards to the pallas backend (2-slot ROM prefetch
+    vs BlockSpec streaming).  Results are memoized by :func:`_cache_key`.
     """
     from repro import codegen
 
     if backend not in codegen.BACKENDS:
         raise ValueError(
             f"unknown backend '{backend}'; available: {codegen.BACKENDS}")
-    key = (spec, batch, backend)
+    key = _cache_key(spec, batch, backend, double_buffer)
     if key in _SYNTH_CACHE:
         return dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
 
@@ -318,7 +338,8 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     if backend == "pallas":
         int8_bits = spec.quant_bits if quant and quant.get("int8_macc") else None
         fwd = codegen.pallas_backend.compile_program(
-            program, lut=lut, quant_bits=int8_bits)
+            program, lut=lut, quant_bits=int8_bits,
+            double_buffer=double_buffer)
     else:  # "xla" and the verilog cross-check both compile the XLA program
         fwd = codegen.xla_backend.compile_program(program)
     params = program.params

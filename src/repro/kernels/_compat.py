@@ -1,8 +1,12 @@
-"""Version compatibility for Pallas TPU APIs.
+"""Version compatibility for jax APIs the kernels and analysis code touch.
 
 ``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` across
 jax releases; resolve whichever this environment provides so the kernels
 import on both sides of the rename.
+
+``compiled.cost_analysis()`` returns one dict on current jax but a
+list/tuple of per-device dicts on older releases (0.4.x);
+:func:`first_cost_analysis` is the one shared normalization.
 """
 
 from __future__ import annotations
@@ -11,4 +15,15 @@ from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
-__all__ = ["CompilerParams"]
+
+def first_cost_analysis(compiled) -> dict:
+    """Normalized ``compiled.cost_analysis()``: the (first device's) cost
+    dict, or ``{}`` when the backend reports nothing.  Exceptions from the
+    underlying call propagate — callers decide whether costs are optional."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}
+
+
+__all__ = ["CompilerParams", "first_cost_analysis"]

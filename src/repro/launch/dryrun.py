@@ -115,11 +115,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 1,
         "microbatches": microbatches,
     }
     try:
-        cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
-            cost = cost[0]
+        from repro.kernels._compat import first_cost_analysis
+
         rec["cost_analysis"] = {
-            k: float(v) for k, v in cost.items()
+            k: float(v) for k, v in first_cost_analysis(compiled).items()
             if isinstance(v, (int, float)) and (k in ("flops", "bytes accessed") or k.startswith("bytes accessed"))
         }
     except Exception as e:  # pragma: no cover

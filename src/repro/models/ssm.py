@@ -120,13 +120,14 @@ def mamba1_prefill(p, cfg: ModelConfig, u, h0=None, chunk: int = 256,
     A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [DI,N]
 
     if cfg.use_pallas and state is None:
-        # the Pallas scan kernel has no h0/conv-tail inputs; continuations
-        # take the (identical-math) jnp path below
+        # h0 forwards into ssm_scan: all-zero/absent carries run the kernel,
+        # a live carry auto-falls back to the (identical-math) ref scan —
+        # a bare h0= resume can't be silently dropped
         from repro.kernels.ssm_scan import ops as ssm_ops
 
         y, h = ssm_ops.ssm_scan(
             x.astype(jnp.float32), delta.astype(jnp.float32), A,
-            Bm.astype(jnp.float32), Cm.astype(jnp.float32),
+            Bm.astype(jnp.float32), Cm.astype(jnp.float32), h0=h0,
         )
         y = y + x * p["D"]
         y = y * jax.nn.silu(z)

@@ -64,12 +64,14 @@ class CacheEntry:
 
 
 class _Node:
-    __slots__ = ("edge", "children", "entry")
+    __slots__ = ("edge", "children", "entry", "parent")
 
-    def __init__(self, edge: tuple[int, ...] = ()):
+    def __init__(self, edge: tuple[int, ...] = (),
+                 parent: "_Node | None" = None):
         self.edge = edge                       # tokens on the edge from parent
         self.children: dict[int, _Node] = {}   # first-token -> child
         self.entry: CacheEntry | None = None
+        self.parent = parent                   # None only for the root
 
 
 def _common_len(a: tuple[int, ...], b: Sequence[int]) -> int:
@@ -108,6 +110,27 @@ class PrefixCache:
             node.entry = None
             self._entry_nodes.discard(node)
             self.stats["evictions"] += 1
+            self._prune(node)
+
+    def _prune(self, node: _Node) -> None:
+        """Unlink entry-less dead wood after an eviction, so the tree's
+        node/edge structure (which budget_bytes does not account) cannot
+        grow without bound: drop childless entry-less nodes bottom-up, then
+        merge a remaining single-child entry-less pass-through node into its
+        child (undoing stale edge splits)."""
+        while (node.parent is not None and node.entry is None
+               and not node.children):
+            parent = node.parent
+            del parent.children[node.edge[0]]
+            node.parent = None
+            node = parent
+        if (node.parent is not None and node.entry is None
+                and len(node.children) == 1):
+            (child,) = node.children.values()
+            child.edge = node.edge + child.edge
+            child.parent = node.parent
+            node.parent.children[child.edge[0]] = child
+            node.parent = None
 
     # -- public ------------------------------------------------------------
 
@@ -122,7 +145,7 @@ class PrefixCache:
         while i < len(tokens):
             child = node.children.get(tokens[i])
             if child is None:
-                child = _Node(tuple(tokens[i:]))
+                child = _Node(tuple(tokens[i:]), parent=node)
                 node.children[tokens[i]] = child
                 node = child
                 i = len(tokens)
@@ -130,8 +153,9 @@ class PrefixCache:
             m = _common_len(child.edge, tokens[i:])
             if m < len(child.edge):
                 # split the edge at the divergence/end-of-prefix point
-                mid = _Node(child.edge[:m])
+                mid = _Node(child.edge[:m], parent=node)
                 child.edge = child.edge[m:]
+                child.parent = mid
                 mid.children[child.edge[0]] = child
                 node.children[tokens[i]] = mid
                 child = mid

@@ -1,0 +1,15 @@
+"""Cross-backend verification: the numpy fixed-point golden model and the
+seeded differential fuzz harness (``python -m repro.verify.difftest``).
+
+The contract this package enforces (README "Verification"):
+
+* the float backends — legacy ``run_scan``/``create_top_module``, the XLA
+  backend, and the generated Pallas kernel (interpret mode) — agree to
+  ≤ 1e-5 on every generated spec;
+* the bit-accurate RTL simulator (``repro.codegen.rtlsim``) is **bit-exact**
+  against the independent fixed-point golden model here, word for word.
+"""
+
+from .golden import fixed_forward
+
+__all__ = ["fixed_forward"]

@@ -1,0 +1,305 @@
+"""Seeded cross-backend differential fuzz harness.
+
+For each seed, generate a random :class:`~repro.core.synthesis.NetworkSpec`
+(cell × shape × seq_len × quant_bits × c_slow × unroll × batch) and a random
+input, then check the repo's executable contract:
+
+* **float paths** — legacy ``create_top_module``/``run_scan``, the XLA
+  backend, and the generated Pallas kernel (interpret mode) — agree to
+  ``FLOAT_ATOL`` (1e-5, fp32);
+* **bit path** — the bit-accurate RTL simulator
+  (:mod:`repro.codegen.rtlsim`) is bit-exact, word for word, against the
+  independent numpy fixed-point golden model
+  (:mod:`repro.verify.golden`) at the spec's word width.
+
+Any divergence is a parity bug; it gets fixed, or the seed is committed to
+:data:`XFAILS` with an issue note so the regression is pinned.
+
+CLI::
+
+    python -m repro.verify.difftest --seeds 50           # fuzz seeds 0..49
+    python -m repro.verify.difftest --seeds 5 --start 100 -v
+    python -m repro.verify.difftest --regen-goldens      # rewrite tests/golden
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import pathlib
+import sys
+import time
+from typing import Any
+
+import numpy as np
+
+FLOAT_ATOL = 1e-5
+FLOAT_RTOL = 1e-5
+
+# seed -> reason.  Divergences found by the fuzzer that are documented
+# rather than fixed in the finding PR land here; difftest reports them as
+# xfail (and flags them loudly if they start passing).
+XFAILS: dict[int, str] = {}
+
+# Golden-file specs (tests/golden/*.v): compact, one per cell, all
+# cross-checked rtlsim-vs-golden-model by the unit suite.
+def golden_specs():
+    from repro.core.synthesis import NetworkSpec
+
+    return {
+        "mlp_case_study_q16": NetworkSpec(3, 4, 4, 2, quant_bits=16),
+        "lstm_h4_q16": NetworkSpec(2, 1, 4, 2, cell="lstm", seq_len=6,
+                                   quant_bits=16),
+        "gru_h4_q16": NetworkSpec(2, 1, 4, 2, cell="gru", seq_len=6,
+                                  quant_bits=16),
+        "ssm_h4_q16": NetworkSpec(2, 1, 4, 2, cell="ssm", seq_len=6,
+                                  quant_bits=16),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Spec generation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Case:
+    seed: int
+    spec: Any               # NetworkSpec (duck-typed: no import cycle)
+    batch: int
+
+    def describe(self) -> str:
+        s = self.spec
+        return (f"seed={self.seed} {s.cell} in={s.num_inputs} "
+                f"layers={s.num_hidden_layers}x{s.nodes_per_layer} "
+                f"out={s.num_outputs} T={s.seq_len} act={s.activation} "
+                f"q={s.quant_bits} c={s.c_slow} j={s.unroll} B={self.batch}")
+
+
+def gen_case(seed: int) -> Case:
+    """Deterministic spec from a seed — odd sizes (primes) on purpose, to
+    stress the Pallas pad-and-mask tiling alongside the round shapes."""
+    from repro.core.synthesis import NetworkSpec
+
+    rng = np.random.default_rng(seed)
+    cell = str(rng.choice(["mlp", "lstm", "gru", "ssm"]))
+    nodes = int(rng.choice([2, 3, 4, 5, 7, 8]))
+    spec = NetworkSpec(
+        num_inputs=int(rng.integers(1, 6)),
+        num_hidden_layers=int(rng.integers(1, 4)),
+        nodes_per_layer=nodes,
+        num_outputs=int(rng.integers(1, 4)),
+        activation=str(rng.choice(["tanh", "sigmoid", "relu"]))
+        if cell == "mlp" else "tanh",
+        cell=cell,
+        # T=33/40 cross the Pallas DEFAULT_CHUNK=32 boundary (multi-chunk
+        # double-buffered ROM streaming); kept rare to bound wall-clock
+        seq_len=0 if cell == "mlp" else int(rng.choice(
+            [1, 2, 5, 7, 12, 33, 40],
+            p=[0.18, 0.18, 0.18, 0.18, 0.18, 0.05, 0.05])),
+        unroll=int(rng.choice([1, 1, 2, 4])),
+        c_slow=int(rng.choice([1, 1, 1, 2, 3])),
+        quant_bits=(None if rng.random() < 0.4
+                    else int(rng.choice([8, 10, 12, 14, 16, 18, 20]))),
+        seed=int(rng.integers(0, 2 ** 31)),
+    )
+    # batch=9 crosses DEFAULT_BLOCK_B=8 (ragged second batch block)
+    batch = int(rng.choice([1, 2, 3, 4, 9], p=[0.24, 0.24, 0.24, 0.18, 0.1]))
+    return Case(seed=seed, spec=spec, batch=batch)
+
+
+def case_input(case: Case) -> np.ndarray:
+    s = case.spec
+    rng = np.random.default_rng(case.seed + 1)
+    shape = (case.batch, s.num_inputs) if s.cell == "mlp" \
+        else (case.batch, s.seq_len, s.num_inputs)
+    if s.c_slow > 1:
+        shape = (s.c_slow,) + shape
+    return rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Reference paths
+# ---------------------------------------------------------------------------
+
+def legacy_forward(spec, u: np.ndarray) -> np.ndarray:
+    """The pre-codegen path: ``create_top_module`` + ``run_scan`` for
+    mlp/lstm/gru; a plain float32 numpy recurrence for the ssm (which the
+    legacy Table-I constructors never supported)."""
+    import jax
+    import jax.numpy as jnp
+
+    flat = u.reshape((-1,) + u.shape[(2 if spec.c_slow > 1 else 1):])
+    if spec.cell == "ssm":
+        from repro.codegen import build_program
+
+        prog = build_program(spec)
+        x = np.asarray(flat, np.float32)
+        for st in prog.stages:
+            p = {k: np.asarray(v, np.float32) for k, v in st.params.items()}
+            h = np.zeros((x.shape[0], p["a"].shape[-1]), np.float32)
+            ys = np.empty(x.shape[:2] + (h.shape[-1],), np.float32)
+            for t in range(x.shape[1]):
+                h = p["a"][0] * h + (x[:, t] @ p["w_in"] + p["b"][0])
+                ys[:, t] = h
+            x = ys
+        y = h @ np.asarray(prog.C, np.float32).T
+    else:
+        from repro.core.synthesis import create_top_module
+
+        params, fwd = create_top_module(spec)
+        y = np.asarray(jax.vmap(fwd, in_axes=(None, 0))(
+            params, jnp.asarray(flat)))
+    if spec.c_slow > 1:
+        y = y.reshape((spec.c_slow, -1) + y.shape[1:])
+    return y
+
+
+# ---------------------------------------------------------------------------
+# One case end-to-end
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CaseResult:
+    case: Case
+    ok: bool
+    float_err: float        # max |xla - pallas|, |xla - legacy|
+    bit_exact: bool
+    max_code_delta: int     # 0 when bit-exact
+    error: str | None = None
+    elapsed_s: float = 0.0
+
+    def line(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        msg = f" [{self.error}]" if self.error else ""
+        return (f"[{status}] {self.case.describe()} "
+                f"float_err={self.float_err:.2e} "
+                f"bit={'exact' if self.bit_exact else self.max_code_delta}"
+                f" ({self.elapsed_s:.1f}s){msg}")
+
+
+def run_case(case: Case) -> CaseResult:
+    from repro.codegen import build_program, compile_spec, rtlsim
+    from repro.verify import golden
+
+    t0 = time.perf_counter()
+    spec, u = case.spec, case_input(case)
+    err_msgs = []
+
+    # float paths
+    p_x, f_x = compile_spec(spec, backend="xla")
+    y_x = np.asarray(f_x(p_x, u))
+    p_p, f_p = compile_spec(spec, backend="pallas")
+    y_p = np.asarray(f_p(p_p, u))
+    y_l = legacy_forward(spec, u)
+    e_pal = float(np.max(np.abs(y_x - y_p))) if y_x.size else 0.0
+    e_leg = float(np.max(np.abs(y_x - y_l))) if y_x.size else 0.0
+    float_err = max(e_pal, e_leg)
+    if not np.allclose(y_p, y_x, atol=FLOAT_ATOL, rtol=FLOAT_RTOL):
+        err_msgs.append(f"pallas≠xla ({e_pal:.2e})")
+    if not np.allclose(y_l, y_x, atol=FLOAT_ATOL, rtol=FLOAT_RTOL):
+        err_msgs.append(f"legacy≠xla ({e_leg:.2e})")
+
+    # bit path: rtlsim vs the independent fixed-point golden model
+    width = spec.quant_bits or rtlsim.DEFAULT_WIDTH
+    prog = build_program(spec)
+    sim = rtlsim.simulate(prog, u, width=width)
+    ref_codes = golden.fixed_forward(prog, u, width=width)
+    bit_exact = bool(np.array_equal(sim.y_codes, ref_codes))
+    max_delta = 0 if bit_exact else int(
+        np.max(np.abs(sim.y_codes - ref_codes)))
+    if not bit_exact:
+        err_msgs.append(f"rtlsim≠golden (max Δcode {max_delta})")
+
+    return CaseResult(
+        case=case,
+        ok=not err_msgs,
+        float_err=float_err,
+        bit_exact=bit_exact,
+        max_code_delta=max_delta,
+        error="; ".join(err_msgs) or None,
+        elapsed_s=time.perf_counter() - t0,
+    )
+
+
+def run_seeds(seeds, verbose: bool = False):
+    """Run a batch of seeds; returns (results, failures-excluding-xfails)."""
+    results, failures = [], []
+    for seed in seeds:
+        case = gen_case(seed)
+        try:
+            res = run_case(case)
+        except Exception as exc:  # a crash is a finding too
+            res = CaseResult(case=case, ok=False, float_err=float("nan"),
+                             bit_exact=False, max_code_delta=-1,
+                             error=f"{type(exc).__name__}: {exc}")
+        if verbose or not res.ok:
+            print(res.line(), flush=True)
+        if not res.ok and seed not in XFAILS:
+            failures.append(res)
+        if res.ok and seed in XFAILS:
+            print(f"[xpass] seed={seed} documented as xfail "
+                  f"({XFAILS[seed]}) but passes — remove it", flush=True)
+        results.append(res)
+    return results, failures
+
+
+# ---------------------------------------------------------------------------
+# Golden regeneration + CLI
+# ---------------------------------------------------------------------------
+
+def regen_goldens(out_dir: pathlib.Path) -> list[pathlib.Path]:
+    """Rewrite the committed golden RTL files (after a deliberate emission
+    change), cross-checking each program rtlsim-vs-golden-model first so a
+    broken emitter can't be frozen into a golden."""
+    from repro.codegen import build_program, emit_program, rtlsim
+    from repro.verify import golden
+
+    out_dir.mkdir(parents=True, exist_ok=True)
+    written = []
+    for name, spec in golden_specs().items():
+        prog = build_program(spec)
+        u = case_input(Case(seed=0, spec=spec, batch=2))
+        sim = rtlsim.simulate(prog, u)
+        ref = golden.fixed_forward(prog, u)
+        if not np.array_equal(sim.y_codes, ref):
+            raise AssertionError(
+                f"refusing to write golden '{name}': rtlsim disagrees with "
+                "the fixed-point golden model")
+        path = out_dir / f"{name}.v"
+        path.write_text(emit_program(prog))
+        written.append(path)
+        print(f"wrote {path}")
+    return written
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.verify.difftest", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--seeds", type=int, default=20,
+                    help="number of seeds to fuzz (default 20)")
+    ap.add_argument("--start", type=int, default=0,
+                    help="first seed (default 0)")
+    ap.add_argument("-v", "--verbose", action="store_true",
+                    help="print every case, not just failures")
+    ap.add_argument("--regen-goldens", action="store_true",
+                    help="rewrite tests/golden/*.v from the current emitter")
+    args = ap.parse_args(argv)
+
+    if args.regen_goldens:
+        root = pathlib.Path(__file__).resolve().parents[3]
+        regen_goldens(root / "tests" / "golden")
+        return 0
+
+    t0 = time.perf_counter()
+    seeds = range(args.start, args.start + args.seeds)
+    results, failures = run_seeds(seeds, verbose=args.verbose)
+    n_xfail = sum(1 for r in results if not r.ok and r.case.seed in XFAILS)
+    print(f"difftest: {sum(r.ok for r in results)}/{len(results)} ok, "
+          f"{len(failures)} failures, {n_xfail} xfail "
+          f"({time.perf_counter() - t0:.1f}s)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

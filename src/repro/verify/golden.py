@@ -1,0 +1,183 @@
+"""Independent numpy fixed-point golden model for the emitted RTL.
+
+``repro.codegen.rtlsim`` simulates the Verilog *structurally* — serial MACC
+cycles, J-copy striding with gated pad lanes, bit-level AF address selects.
+This module computes the same words a second way, as vectorized integer
+linear algebra straight off the datapath graph, sharing **no** arithmetic
+code with rtlsim (only the IR it walks and the published word format).
+``difftest`` requires the two to agree **bit-exactly** on every generated
+spec; any divergence is a bug in one of them (or in the emission they both
+model).
+
+Word semantics implemented independently here:
+
+* words are signed ``width``-bit codes of ``Q(4.width-4)`` values
+  (round-to-nearest, saturate on quantization — the ROM load convention);
+* MACC: exact integer dot product wrapped to ``2*width`` bits, arithmetic
+  shift right by ``width-4`` (the RTL's ``[2W-5 -: W]`` select), wrap to
+  ``width`` bits; bias adds wrap at ``width`` bits;
+* AF ROMs: activation sampled at the 2^AF_ADDR_BITS bin centers over
+  ``[-R, R)`` and quantized; the address is the input's bin index (clamped),
+  computed from the *real* value — provably equal to the RTL's shifted
+  bit-select because every intermediate is a power-of-two-scaled integer,
+  exact in float64;
+* gate algebra is lane-wise: add/sub wrap at ``width``; mul takes the
+  Q-aligned slice of the 2W-bit lane product.
+
+int64 is exact for every step as long as ``2*width <= 64``: numpy wraps
+mod 2^64, and reducing mod 2^(2·width) afterwards gives the same words.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.state_space import ACTIVATIONS
+from repro.kernels._lut import RANGE as _AF_RANGE
+
+from repro.codegen.ir import Program
+
+AF_ADDR_BITS = 6  # must match verilog.AF_ADDR_BITS (asserted in tests)
+DEFAULT_WIDTH = 18
+_COMB = {"identity", "relu"}
+
+
+def _wrap(v, bits: int):
+    """Two's-complement reinterpretation of the low ``bits`` bits."""
+    if bits >= 64:  # int64 already wraps mod 2^64
+        return np.asarray(v, np.int64)
+    span = np.int64(1) << np.int64(bits)
+    v = np.asarray(v, np.int64) & (span - 1)
+    return np.where(v >= (span >> 1), v - span, v)
+
+
+def _quant(vals, width: int):
+    """Real → signed word: round to nearest, saturate (ROM load rule)."""
+    scale = 2.0 ** (width - 4)
+    q = np.rint(np.asarray(vals, np.float64) * scale)
+    top = 2 ** (width - 1)
+    return np.clip(q, -top, top - 1).astype(np.int64)
+
+
+def _macc(x, w, width: int, bias=None):
+    """x[..., in] @ w[in, out] on the fixed-point datapath."""
+    z = _wrap(np.matmul(np.asarray(x, np.int64), np.asarray(w, np.int64)),
+              2 * width)
+    z = _wrap(z >> np.int64(width - 4), width)
+    if bias is not None:
+        z = _wrap(z + bias, width)
+    return z
+
+
+def _mul(a, b, width: int):
+    p = _wrap(np.asarray(a, np.int64) * np.asarray(b, np.int64), 2 * width)
+    return _wrap(p >> np.int64(width - 4), width)
+
+
+def _af_table(fn: str, width: int) -> np.ndarray:
+    n = 2 ** AF_ADDR_BITS
+    centers = (np.arange(n) + 0.5) / n * (2 * _AF_RANGE) - _AF_RANGE
+    return _quant(ACTIVATIONS[fn](centers.astype(np.float32)), width)
+
+
+def _af(fn: str, x, table, width: int):
+    if fn == "identity":
+        return x
+    if fn == "relu":
+        return np.maximum(x, 0)
+    n = 2 ** AF_ADDR_BITS
+    xr = np.asarray(x, np.float64) / 2.0 ** (width - 4)
+    idx = np.floor((xr + _AF_RANGE) / (2 * _AF_RANGE) * n).astype(np.int64)
+    return table[np.clip(idx, 0, n - 1)]
+
+
+def _eval_graph(graph, consts, states, u, k: int, width: int, af_tables):
+    env: dict[str, np.ndarray] = {}
+    for n in graph.nodes:
+        if n.op == "input":
+            env[n.name] = u
+        elif n.op == "state":
+            env[n.name] = states[n.name]
+        elif n.op == "const":
+            c = consts[n.name]
+            env[n.name] = c[k] if n.attr("per_step") else c
+        elif n.op == "macc":
+            b = env[n.inputs[2]] if len(n.inputs) == 3 else None
+            if b is not None and b.ndim > 1:
+                b = b[0]
+            env[n.name] = _macc(env[n.inputs[0]], env[n.inputs[1]], width,
+                                bias=b)
+        elif n.op == "af":
+            fn = n.attr("fn")
+            env[n.name] = _af(fn, env[n.inputs[0]], af_tables.get(fn), width)
+        elif n.op == "concat":
+            lead = env[n.inputs[0]].shape[:-1]
+            env[n.name] = np.concatenate(
+                [np.broadcast_to(env[i], lead + (graph.node(i).width,))
+                 for i in n.inputs], axis=-1)
+        elif n.op == "slice":
+            env[n.name] = env[n.inputs[0]][..., n.attr("start"):n.attr("stop")]
+        elif n.op == "add":
+            env[n.name] = _wrap(env[n.inputs[0]] + env[n.inputs[1]], width)
+        elif n.op == "sub":
+            env[n.name] = _wrap(env[n.inputs[0]] - env[n.inputs[1]], width)
+        elif n.op == "mul":
+            env[n.name] = _mul(env[n.inputs[0]], env[n.inputs[1]], width)
+        else:  # pragma: no cover
+            raise ValueError(f"unknown op {n.op}")
+    new_states = {s: env[src] for s, src in graph.updates.items()}
+    return new_states, env[graph.output] if graph.output else None
+
+
+def fixed_forward(program: Program, u: np.ndarray,
+                  width: int | None = None) -> np.ndarray:
+    """Fixed-point forward pass; returns the output **words** (int64 codes).
+
+    Input shapes match the executable backends: mlp ``[B, L]``, recurrent
+    ``[B, T, D]``, with a leading stream axis when ``c_slow > 1`` (streams
+    are independent, so they ride numpy broadcasting — no interleave loop).
+    Divide by ``2**(width-4)`` for real values.
+    """
+    spec = program.spec
+    W = width if width is not None else (spec.quant_bits or DEFAULT_WIDTH)
+    if not 8 <= W <= 32:
+        raise ValueError(f"golden model requires 8 <= width <= 32, got {W}")
+    is_mlp = program.beta is not None
+
+    stages = []
+    for st in program.stages:
+        consts = {n.name: _quant(np.asarray(st.params[n.name]), W)
+                  for n in st.graph.consts()}
+        tables = {n.attr("fn"): _af_table(n.attr("fn"), W)
+                  for n in st.graph.af_nodes() if n.attr("fn") not in _COMB}
+        stages.append((st, consts, tables))
+
+    u_q = _quant(u, W)
+    C_q = _quant(np.asarray(program.C), W)  # [P, M]
+
+    if is_mlp:
+        beta_q = _quant(np.asarray(program.beta), W)  # [M, L]
+        x = _macc(u_q, beta_q.T, W)
+        st, consts, tables = stages[0]
+        states = {name: x for name in st.graph.states}
+        for k in range(st.schedule.steps):
+            states, _ = _eval_graph(st.graph, consts, states, None, k, W,
+                                    tables)
+        x_final = states[program.readout_state]
+    else:
+        T = u_q.shape[-2]
+        all_states = [
+            {name: np.zeros(u_q.shape[:-2] + (w_,), np.int64)
+             for name, w_ in st.graph.states.items()}
+            for st, _, _ in stages
+        ]
+        for k in range(T):
+            bus = u_q[..., k, :]
+            for si, (st, consts, tables) in enumerate(stages):
+                all_states[si], bus = _eval_graph(
+                    st.graph, consts, all_states[si], bus, k, W, tables)
+        x_final = all_states[-1][program.readout_state]
+    return _macc(x_final, C_q.T, W)
+
+
+__all__ = ["fixed_forward", "AF_ADDR_BITS", "DEFAULT_WIDTH"]

@@ -1,0 +1,423 @@
+"""Unit suite for the verification subsystem: the bit-accurate RTL
+simulator (``codegen.rtlsim``), the independent fixed-point golden model
+(``verify.golden``), the differential fuzz harness (``verify.difftest``),
+and the golden Verilog files for every registered cell."""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.codegen import build_program, emit_program, rtlsim
+from repro.core.quantization import default_format
+from repro.core.synthesis import NetworkSpec
+from repro.verify import difftest, golden
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+
+SPECS = {
+    "mlp": NetworkSpec(3, 4, 4, 2, quant_bits=16),
+    "lstm": NetworkSpec(3, 2, 8, 2, cell="lstm", seq_len=12, quant_bits=16),
+    "gru": NetworkSpec(3, 2, 8, 2, cell="gru", seq_len=12, quant_bits=12),
+    "ssm": NetworkSpec(3, 2, 8, 2, cell="ssm", seq_len=12, quant_bits=18),
+}
+
+
+def _u(spec, batch=3, seed=0, streams=False):
+    rng = np.random.default_rng(seed)
+    shape = (batch, spec.num_inputs) if spec.cell == "mlp" \
+        else (batch, spec.seq_len, spec.num_inputs)
+    if streams:
+        shape = (spec.c_slow,) + shape
+    return rng.uniform(-1, 1, shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Word-level primitives (rtlsim vs the independently-written golden ops)
+# ---------------------------------------------------------------------------
+
+def test_wrap_two_complement():
+    w = 8
+    assert rtlsim.wrap(127, w) == 127 and rtlsim.wrap(128, w) == -128
+    assert rtlsim.wrap(-129, w) == 127
+    v = np.arange(-1000, 1000)
+    np.testing.assert_array_equal(rtlsim.wrap(v, w), golden._wrap(v, w))
+
+
+def test_words_quantize_saturates():
+    fmt = default_format(12)
+    w = rtlsim.words_of(np.array([1000.0, -1000.0, 0.0]), fmt)
+    assert w[0] == 2 ** 11 - 1 and w[1] == -(2 ** 11) and w[2] == 0
+    np.testing.assert_array_equal(
+        w, golden._quant(np.array([1000.0, -1000.0, 0.0]), 12))
+
+
+def test_macc_word_q_alignment():
+    # 1.0 * 1.0 in Q(4.12): codes 4096; product 4096² >> 12 = 4096 (= 1.0)
+    W = 16
+    assert rtlsim.macc_word(np.int64(4096 * 4096), W) == 4096
+    # top-4-bit overflow is DISCARDED (wrap), exactly like the [2W-5-:W] select
+    big = np.int64(9) << np.int64(2 * W - 5)  # lands beyond the select's top
+    assert rtlsim.macc_word(big, W) == rtlsim.wrap(big >> (W - 4), W)
+
+
+@pytest.mark.parametrize("unroll", [1, 2, 3, 5])
+def test_macc_layer_matches_golden_matmul(unroll):
+    """Structural serial MACC (J copies, gated pad lanes, per-cycle 2W wrap)
+    ≡ the golden model's vectorized matmul — for every J."""
+    rng = np.random.default_rng(42)
+    W = 16
+    x = rng.integers(-2 ** 15, 2 ** 15, (4, 7))
+    w = rng.integers(-2 ** 15, 2 ** 15, (7, 3))
+    b = rng.integers(-2 ** 15, 2 ** 15, (3,))
+    got = rtlsim.macc_layer(x, w, W, bias=b, unroll=unroll)
+    want = golden._macc(x, w, W, bias=b)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_macc_layer_overflow_wraps_identically():
+    W = 8  # tiny width so the accumulator genuinely overflows
+    rng = np.random.default_rng(7)
+    x = rng.integers(-128, 128, (2, 32))
+    w = rng.integers(-128, 128, (32, 4))
+    np.testing.assert_array_equal(
+        rtlsim.macc_layer(x, w, W), golden._macc(x, w, W))
+
+
+def test_af_rom_tables_shared():
+    """Both sims must burn the same ROM contents (the verilog tables)."""
+    assert golden.AF_ADDR_BITS == rtlsim.AF_ADDR_BITS
+    for fn in ("tanh", "sigmoid"):
+        for W in (8, 12, 16, 18):
+            np.testing.assert_array_equal(
+                rtlsim.af_rom(fn, default_format(W)), golden._af_table(fn, W))
+
+
+@pytest.mark.parametrize("width", [8, 11, 16, 20])
+def test_af_lookup_bit_select_equals_real_binning(width):
+    """rtlsim's biased/clamp/bit-select address ≡ golden's real-valued bin
+    index — across the full code range including both clamp edges."""
+    rom = rtlsim.af_rom("tanh", default_format(width))
+    top = 2 ** (width - 1)
+    codes = np.unique(np.concatenate([
+        np.linspace(-top, top - 1, 4001).astype(np.int64),
+        np.arange(-top, min(-top + 70, top - 1)),   # low clamp edge
+        np.arange(max(top - 70, -top), top),        # high clamp edge
+    ]))
+    got = rtlsim.af_lookup(codes, rom, width)
+    want = golden._af("tanh", codes, rom, width)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_comb_af_relu_identity():
+    q = rtlsim.QuantStage.build(
+        build_program(NetworkSpec(3, 2, 4, 2, activation="relu",
+                                  quant_bits=16)).stages[0],
+        default_format(16))
+    x = np.array([[-5, 0, 7, -1]], np.int64)
+    states, _ = rtlsim.step_graph(q, {"x": x}, None, 0)
+    assert (states["x"] >= 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Program-level: rtlsim ≡ golden model, schedule transforms semantics-free
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", sorted(SPECS))
+def test_rtlsim_bit_exact_vs_golden(cell):
+    spec = SPECS[cell]
+    prog = build_program(spec)
+    u = _u(spec)
+    sim = rtlsim.simulate(prog, u)
+    np.testing.assert_array_equal(sim.y_codes, golden.fixed_forward(prog, u))
+    # real values are just rescaled words
+    np.testing.assert_allclose(sim.y, sim.y_codes / sim.fmt.scale)
+
+
+@pytest.mark.parametrize("width", [8, 10, 14, 24])
+def test_rtlsim_bit_exact_across_widths(width):
+    spec = NetworkSpec(2, 1, 5, 2, cell="lstm", seq_len=7)
+    prog = build_program(spec)
+    u = _u(spec, batch=2, seed=width)
+    sim = rtlsim.simulate(prog, u, width=width)
+    np.testing.assert_array_equal(
+        sim.y_codes, golden.fixed_forward(prog, u, width=width))
+
+
+def test_rtlsim_unroll_semantics_free():
+    """J datapath copies change serial cycles, never words (pad lanes are
+    gated off exactly as the RTL's ``en = ~done & ~pad``)."""
+    import dataclasses
+
+    base = SPECS["gru"]
+    u = _u(base)
+    s1 = rtlsim.simulate(build_program(base), u)
+    s4 = rtlsim.simulate(
+        build_program(dataclasses.replace(base, unroll=4)), u)
+    np.testing.assert_array_equal(s1.y_codes, s4.y_codes)
+    assert s4.cycles < s1.cycles  # fewer serial MACC cycles per step
+
+
+def test_rtlsim_cslow_streams_independent():
+    import dataclasses
+
+    spec = dataclasses.replace(SPECS["lstm"], c_slow=2)
+    u = _u(spec, streams=True)
+    sim = rtlsim.simulate(build_program(spec), u)
+    base = build_program(dataclasses.replace(spec, c_slow=1))
+    for c in range(2):
+        np.testing.assert_array_equal(
+            sim.y_codes[c], rtlsim.simulate(base, u[c]).y_codes)
+
+
+def test_rtlsim_tracks_float_backend():
+    """18-bit words with the 64-entry AF ROM: the fixed-point output must
+    track the float XLA backend (coarse-table error, not garbage)."""
+    from repro.codegen import compile_spec
+
+    spec = NetworkSpec(3, 2, 8, 2, cell="lstm", seq_len=12)
+    u = _u(spec)
+    p, f = compile_spec(spec, backend="xla")
+    y_float = np.asarray(f(p, u))
+    sim = rtlsim.simulate(build_program(spec), u, width=18)
+    assert float(np.max(np.abs(sim.y - y_float))) < 0.15
+
+
+def test_rtlsim_mlp_snr_vs_double_reference():
+    """Paper Fig. 11-style check: fixed-point output carries real signal
+    relative to the double-precision reference."""
+    from repro.core.quantization import float_mlp_forward, output_snr_db
+
+    spec = NetworkSpec(3, 4, 4, 2, quant_bits=16)
+    prog = build_program(spec)
+    u = _u(spec, batch=64)
+    sim = rtlsim.simulate(prog, u)
+    sp = prog.stages[0].params
+    W = np.swapaxes(np.asarray(sp["W"], np.float64), -1, -2)
+    b = np.asarray(sp["b"], np.float64)[:, 0, :]
+    y_ref = float_mlp_forward(W, b, np.asarray(prog.beta), np.asarray(prog.C), u)
+    assert float(np.mean(output_snr_db(y_ref, sim.y))) > 10.0
+
+
+def test_rtlsim_rejects_bad_width():
+    prog = build_program(SPECS["mlp"])
+    with pytest.raises(ValueError, match="width"):
+        rtlsim.simulate(prog, _u(SPECS["mlp"]), width=7)
+    with pytest.raises(ValueError, match="width"):
+        rtlsim.simulate(prog, _u(SPECS["mlp"]), width=33)
+
+
+def test_rtlsim_rejects_bad_shape():
+    prog = build_program(SPECS["lstm"])
+    with pytest.raises(ValueError, match="ndim"):
+        rtlsim.simulate(prog, np.zeros((4, 3)))  # missing the T axis
+
+
+def test_rtlsim_cycles_scale_with_schedule():
+    """The FSM cycle model: C·N steps dominate; MACC serial count scales
+    with the input bus width."""
+    import dataclasses
+
+    spec = SPECS["ssm"]
+    c1 = rtlsim.simulate(build_program(spec), _u(spec)).cycles
+    c2 = rtlsim.simulate(
+        build_program(dataclasses.replace(spec, c_slow=2)),
+        _u(dataclasses.replace(spec, c_slow=2), streams=True)).cycles
+    assert c2 == 2 * c1  # two interleaved streams, same datapath
+
+
+# ---------------------------------------------------------------------------
+# Golden Verilog files: every cell, byte-stable, rtlsim-cross-checked
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(difftest.golden_specs()))
+def test_golden_verilog_byte_stable(name):
+    spec = difftest.golden_specs()[name]
+    rtl = emit_program(build_program(spec))
+    assert rtl == (GOLDEN_DIR / f"{name}.v").read_text(), (
+        f"golden '{name}' is stale — regenerate deliberately with "
+        "`python -m repro.verify.difftest --regen-goldens` and review the diff")
+
+
+@pytest.mark.parametrize("name", sorted(difftest.golden_specs()))
+def test_golden_spec_rtlsim_cross_check(name):
+    """Each committed golden's program: rtlsim ≡ the fixed-point oracle."""
+    spec = difftest.golden_specs()[name]
+    prog = build_program(spec)
+    u = difftest.case_input(difftest.Case(seed=0, spec=spec, batch=2))
+    sim = rtlsim.simulate(prog, u)
+    np.testing.assert_array_equal(sim.y_codes, golden.fixed_forward(prog, u))
+
+
+def test_golden_emission_per_lane_gate_algebra():
+    """The parity bugs rtlsim flushed out stay fixed: gate algebra is
+    per-lane (no whole-bus carry bleed) and elementwise consts are
+    materialized buses, not implicit 1-bit wires."""
+    rtl = (GOLDEN_DIR / "ssm_h4_q16.v").read_text()
+    assert "generate" in rtl and "ew_ah" in rtl          # per-lane mul
+    assert "p[2*WIDTH-1-4 -: WIDTH]" in rtl              # Q-aligned product
+    assert "wire signed [4*WIDTH-1:0] w_a = {" in rtl    # const bus
+    gru = (GOLDEN_DIR / "gru_h4_q16.v").read_text()
+    assert "w_bh_n = {" in gru
+    # no whole-bus elementwise assigns survive anywhere
+    for name in difftest.golden_specs():
+        text = (GOLDEN_DIR / f"{name}.v").read_text()
+        for line in text.splitlines():
+            if "// elementwise" in line:
+                assert "assign" not in line.split("//")[0]
+
+
+def test_emit_rejects_narrow_width():
+    with pytest.raises(ValueError, match="quant_bits"):
+        emit_program(build_program(NetworkSpec(3, 2, 4, 2, quant_bits=6)))
+
+
+def test_const_on_macc_data_port_gets_a_bus():
+    """A const that is BOTH a MACC weight ROM and another MACC's x_bus data
+    operand must still get a materialized bus (the data port is a datapath
+    use, not a ROM port)."""
+    from repro.codegen import GraphBuilder
+    from repro.codegen.verilog import _macc_port_uses
+
+    g = GraphBuilder()
+    g.state("x", 2)
+    g.state("y", 4)
+    g.const("c", (4, 4))
+    g.const("W2", (4, 2))
+    g.update("y", g.macc("z1", "y", "c"))   # c as weight ROM
+    g.update("x", g.macc("z2", "c", "W2"))  # c as x_bus data operand
+    graph = g.build()
+    assert "c" not in _macc_port_uses(graph)
+    assert "W2" in _macc_port_uses(graph)
+
+
+def test_program_rejects_multi_stage_beta():
+    """beta-injection (mlp-form) programs are single-stage by contract —
+    every backend and both simulators realize βuδ[k] as the one stage's
+    loaded state, so a multi-stage beta program must not validate."""
+    import dataclasses as dc
+
+    prog = build_program(SPECS["mlp"])
+    bad = dc.replace(prog, stages=prog.stages + prog.stages)
+    with pytest.raises(ValueError, match="exactly 1 stage"):
+        bad.validate()
+
+
+def test_ir_validate_rejects_width_mismatches():
+    """The bus-width agreement the per-lane RTL emission and both simulators
+    rely on is now enforced at validate() time."""
+    from repro.codegen import DatapathGraph, Node
+
+    lanes_differ = DatapathGraph(
+        nodes=[Node("x", "state", (), 4), Node("y", "state", (), 3),
+               Node("s", "add", ("x", "y"), 4)],
+        states={"x": 4, "y": 3}, updates={"x": "s", "y": "y"})
+    with pytest.raises(ValueError, match="lane widths"):
+        lanes_differ.validate()
+    bad_slice = DatapathGraph(
+        nodes=[Node("x", "state", (), 4),
+               Node("sl", "slice", ("x",), 3,
+                    (("start", 2), ("stop", 5)))],
+        states={"x": 4}, updates={"x": "sl"})
+    with pytest.raises(ValueError, match="out of range"):
+        bad_slice.validate()
+
+
+# ---------------------------------------------------------------------------
+# The fuzz harness itself
+# ---------------------------------------------------------------------------
+
+def test_gen_case_deterministic_and_covering():
+    cases = [difftest.gen_case(s) for s in range(40)]
+    again = [difftest.gen_case(s) for s in range(40)]
+    assert [c.spec for c in cases] == [c.spec for c in again]
+    cells = {c.spec.cell for c in cases}
+    assert cells == {"mlp", "lstm", "gru", "ssm"}
+    assert any(c.spec.c_slow > 1 for c in cases)
+    assert any(c.spec.quant_bits for c in cases)
+    assert any(c.spec.quant_bits is None for c in cases)
+
+
+def test_case_input_matches_spec_shape():
+    case = difftest.gen_case(8)  # has c_slow > 1
+    u = difftest.case_input(case)
+    assert case.spec.c_slow > 1 and u.shape[0] == case.spec.c_slow
+    assert u.shape[1] == case.batch
+
+
+@pytest.mark.parametrize("seed", [0, 11])
+def test_run_case_passes(seed):
+    res = difftest.run_case(difftest.gen_case(seed))
+    assert res.ok and res.bit_exact and res.float_err < 1e-5, res.line()
+
+
+def test_run_seeds_reports_failures_not_xfails():
+    results, failures = difftest.run_seeds([0])
+    assert len(results) == 1 and not failures
+
+
+def test_xfail_registry_well_formed():
+    for seed, reason in difftest.XFAILS.items():
+        assert isinstance(seed, int) and isinstance(reason, str) and reason
+
+
+def test_difftest_cli_smoke(capsys):
+    assert difftest.main(["--seeds", "1", "--start", "3", "-v"]) == 0
+    out = capsys.readouterr().out
+    assert "1/1 ok" in out
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions (this PR)
+# ---------------------------------------------------------------------------
+
+def test_first_cost_analysis_compat():
+    from repro.kernels._compat import first_cost_analysis
+
+    class Fake:
+        def __init__(self, ret):
+            self._ret = ret
+
+        def cost_analysis(self):
+            return self._ret
+
+    assert first_cost_analysis(Fake({"flops": 2.0})) == {"flops": 2.0}
+    assert first_cost_analysis(Fake([{"flops": 3.0}])) == {"flops": 3.0}
+    assert first_cost_analysis(Fake([])) == {}
+    assert first_cost_analysis(Fake(None)) == {}
+
+
+def test_first_cost_analysis_on_real_compiled():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels._compat import first_cost_analysis
+
+    compiled = jax.jit(lambda a: a @ a).lower(
+        jnp.ones((8, 8), jnp.float32)).compile()
+    cost = first_cost_analysis(compiled)
+    assert isinstance(cost, dict)
+
+
+def test_synthesize_memo_key_captures_quant_and_double_buffer():
+    import dataclasses
+
+    from repro.core.synthesis import synthesize, synthesize_cache_clear
+
+    synthesize_cache_clear()
+    spec = NetworkSpec(2, 1, 4, 2, cell="lstm", seq_len=4, quant_bits=8)
+    r_q8 = synthesize(spec, batch=2, backend="pallas")
+    assert r_q8.quant and r_q8.quant["int8_macc"]
+    # quant knob differs -> MUST miss the cache (the int8 program is a
+    # different artifact than the float one)
+    r_float = synthesize(dataclasses.replace(spec, quant_bits=None),
+                         batch=2, backend="pallas")
+    assert not r_float.cache_hit and r_float.quant is None
+    # double_buffer differs -> fresh compile, not the cached variant
+    r_nodb = synthesize(spec, batch=2, backend="pallas", double_buffer=False)
+    assert not r_nodb.cache_hit
+    assert synthesize(spec, batch=2, backend="pallas").cache_hit
+    # non-pallas backends ignore double_buffer: both spellings share a key
+    r_v = synthesize(spec, batch=2, backend="verilog")
+    assert synthesize(spec, batch=2, backend="verilog",
+                      double_buffer=False).cache_hit and not r_v.cache_hit

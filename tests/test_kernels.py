@@ -50,6 +50,46 @@ def test_ssm_scan_blocking_invariance(chunk, block_d, w):
     np.testing.assert_allclose(y_k, y_r, atol=3e-5, rtol=1e-4)
 
 
+def test_ssm_scan_resume_parity():
+    """A nonzero carry must not raise — it falls back to the ref path, so
+    chunked prefill (scan first half, resume with h_final) exactly equals
+    the one-shot scan."""
+    Bsz, T, D, N = 2, 64, 16, 4
+    x = jnp.asarray(RNG.normal(size=(Bsz, T, D)), jnp.float32)
+    delta = jnp.asarray(RNG.uniform(0.001, 0.5, size=(Bsz, T, D)), jnp.float32)
+    A = -jnp.exp(jnp.asarray(RNG.normal(size=(D, N)), jnp.float32))
+    B = jnp.asarray(RNG.normal(size=(Bsz, T, N)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(Bsz, T, N)), jnp.float32)
+    y_full, h_full = ssm_scan(x, delta, A, B, C)
+    h = T // 2
+    y1, h_mid = ssm_scan(x[:, :h], delta[:, :h], A, B[:, :h], C[:, :h])
+    y2, h_end = ssm_scan(x[:, h:], delta[:, h:], A, B[:, h:], C[:, h:],
+                         h0=h_mid)  # used to raise NotImplementedError
+    np.testing.assert_allclose(np.concatenate([y1, y2], axis=1), y_full,
+                               atol=3e-5, rtol=1e-4)
+    np.testing.assert_allclose(h_end, h_full, atol=3e-5, rtol=1e-4)
+
+
+def test_ssm_scan_resume_under_jit():
+    """Tracing must not crash on the h0 concreteness check: abstract carries
+    conservatively take the ref path."""
+    import jax
+
+    Bsz, T, D, N = 1, 16, 8, 4
+    x = jnp.asarray(RNG.normal(size=(Bsz, T, D)), jnp.float32)
+    delta = jnp.asarray(RNG.uniform(0.01, 0.5, size=(Bsz, T, D)), jnp.float32)
+    A = -jnp.exp(jnp.asarray(RNG.normal(size=(D, N)), jnp.float32))
+    B = jnp.asarray(RNG.normal(size=(Bsz, T, N)), jnp.float32)
+    C = jnp.asarray(RNG.normal(size=(Bsz, T, N)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(size=(Bsz, D, N)), jnp.float32)
+
+    y_jit, h_jit = jax.jit(
+        lambda h: ssm_scan(x, delta, A, B, C, h0=h))(h0)
+    y_ref, h_ref = ssm_scan_ref(x, delta, A, B, C, h0)
+    np.testing.assert_allclose(y_jit, y_ref, atol=1e-6)
+    np.testing.assert_allclose(h_jit, h_ref, atol=1e-6)
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

@@ -177,6 +177,33 @@ def test_prefix_cache_lru_eviction():
     assert big.lookup([0, 1]) == []
 
 
+def test_prefix_cache_eviction_prunes_tree_nodes():
+    """Eviction must unlink the dead radix nodes, not just drop their
+    entries — otherwise the tree structure (never counted against
+    budget_bytes) grows one node per unique evicted prompt, forever."""
+    def count_nodes(pc):
+        n, stack = 0, [pc.root]
+        while stack:
+            node = stack.pop()
+            n += 1
+            stack.extend(node.children.values())
+        return n
+
+    pc = PrefixCache(budget_bytes=2 * 16 + 8)  # room for 2 [1,4] f32 entries
+    for i in range(200):  # 200 disjoint prefixes through a 2-entry budget
+        pc.insert([i, i + 1, i + 2], {"h": jnp.full((1, 4), float(i))})
+    t = pc.telemetry()
+    assert t["entries"] == 2 and t["bytes_in_use"] <= pc.budget_bytes
+    assert count_nodes(pc) <= 1 + 2 * t["entries"]  # root + live paths only
+    # shared-prefix splits heal too: evicting a mid node re-merges the edge
+    pc2 = PrefixCache(budget_bytes=16)  # one entry fits
+    pc2.insert([7, 8, 9, 10], {"h": jnp.ones((1, 4))})
+    pc2.insert([7, 8], {"h": jnp.ones((1, 4))})      # splits, evicts the leaf
+    pc2.insert([1, 2], {"h": jnp.ones((1, 4))})      # evicts [7,8] as well
+    assert [e.length for e in pc2.lookup([1, 2])] == [2]
+    assert count_nodes(pc2) == 2                     # root + the [1,2] leaf
+
+
 def test_prefix_cache_full_hit_recomputes_zero_steps(smollm):
     """Second admission of an identical prompt recomputes 0 prompt steps and
     produces token-identical greedy output (hit vs miss)."""

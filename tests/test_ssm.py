@@ -78,3 +78,18 @@ def test_mamba1_kernel_path_matches(m1cfg, key):
     y_pal, st_p = ssm.mamba1_prefill(p, cfgP, u)
     np.testing.assert_allclose(y_pal, y_jnp, atol=2e-4, rtol=1e-3)
     np.testing.assert_allclose(st_p["h"], st_j["h"], atol=1e-4, rtol=1e-3)
+
+
+def test_mamba1_kernel_path_honors_bare_h0(m1cfg, key):
+    """A bare ``h0=`` resume under use_pallas must not be silently dropped:
+    the live carry forwards into ssm_scan, which falls back to the ref
+    path, so the output matches the jnp path given the same carry."""
+    p = ssm.mamba1_params(key, m1cfg)
+    u = jax.random.normal(jax.random.PRNGKey(5), (2, 16, m1cfg.d_model)) * 0.5
+    h0 = jax.random.normal(jax.random.PRNGKey(6),
+                           (2, m1cfg.d_inner, m1cfg.ssm_state)) * 0.3
+    y_jnp, st_j = ssm.mamba1_prefill(p, m1cfg, u, h0=h0)
+    cfgP = dataclasses.replace(m1cfg, use_pallas=True)
+    y_pal, st_p = ssm.mamba1_prefill(p, cfgP, u, h0=h0)
+    np.testing.assert_allclose(y_pal, y_jnp, atol=2e-4, rtol=1e-3)
+    np.testing.assert_allclose(st_p["h"], st_j["h"], atol=1e-4, rtol=1e-3)

@@ -41,6 +41,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import obs as obs_lib
 from repro.core.state_space import ACTIVATIONS
 from repro.kernels._compat import CompilerParams
 from repro.kernels._lut import lut_interpolate, shifted_table
@@ -127,6 +128,20 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
     sh_q = [n for n in shared_names if n in qnames]   # resident int8 ROMs
     # double-buffered stream set: per-step ROM pages + their scale pages
     stream_names = per_step + [f"{n}.scale" for n in ps_q]
+
+    # Compile-time-only observability: count generated stages and annotate
+    # the ROM-prefetch configuration.  NEVER trace inside kernel()/run() —
+    # they execute under jit, where a host-side tracer would either leak
+    # into the jaxpr or force a sync.
+    _O = obs_lib.OBS
+    _O.metrics.counter(
+        "pallas_stages_compiled", "fused stage kernels generated",
+        quantized=str(bool(int8)).lower()).inc()
+    _O.tracer.instant(
+        "pallas.compile_stage", cat="codegen",
+        args={"per_step_roms": len(per_step), "streamed_pages": len(stream_names),
+              "double_buffer": bool(double_buffer and per_step),
+              "states": n_state, "unroll": sched.unroll, "c_slow": sched.c_slow})
 
     def kernel(*refs, ct: int, num_chunks: int, t_total: int):
         db = double_buffer and bool(per_step)

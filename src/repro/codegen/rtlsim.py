@@ -362,11 +362,29 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
     )
 
 
+def fsm_cycle_estimate(program: Program, T: int | None = None) -> int:
+    """Predicted controller clocks for ONE full evaluation of ``program``
+    (all C streams), without running the datapath — the cheap side of the
+    predicted-vs-measured ledger (:mod:`repro.obs.ledger`).
+
+    Exactly the count :func:`simulate` reports as ``cycles`` for an input of
+    ``T`` serial steps per stream (default: the schedule's step count, i.e.
+    the spec-shaped input).  Width-independent: the FSM trace depends only
+    on the schedule and graph shapes, never on word length.
+    """
+    sched = program.stages[0].schedule
+    is_mlp = program.beta is not None
+    steps = sched.steps if T is None else T
+    return sched.c_slow * _fsm_cycles_per_stream(
+        program, sched.unroll, steps, is_mlp)
+
+
 __all__ = [
     "MIN_WIDTH",
     "QuantStage",
     "RtlSimResult",
     "af_lookup",
+    "fsm_cycle_estimate",
     "af_rom",
     "macc_layer",
     "macc_word",

@@ -33,6 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_lib
+
 from .state_space import mlp_forward, resolve_activation
 
 
@@ -280,12 +282,26 @@ def _quant_analysis(spec: NetworkSpec, backend: str, prog) -> dict | None:
     )
 
 
+def _ledger_key(spec: NetworkSpec, batch: int | None, backend: str) -> str:
+    """Program id in the predicted-vs-measured ledger: one row per distinct
+    compiled artifact the Fig. 10 loop could rank."""
+    key = f"{spec.name}|{backend}|u{spec.unroll}|c{spec.c_slow}"
+    if spec.quant_bits is not None:
+        key += f"|q{spec.quant_bits}"
+    if batch:
+        key += f"|b{batch}"
+    return key
+
+
 def _analyze_compiled(fwd, params, u: jax.ShapeDtypeStruct):
-    """lower → compile → (timings, hlo bytes, flops, peak bytes)."""
+    """lower → compile → (timings, hlo bytes, flops, peak bytes, compiled)."""
+    tr = obs_lib.OBS.tracer
     t0 = time.perf_counter()
-    lowered = jax.jit(fwd).lower(params, u)
+    with tr.span("synth.lower", cat="synth"):
+        lowered = jax.jit(fwd).lower(params, u)
     t1 = time.perf_counter()
-    compiled = lowered.compile()
+    with tr.span("synth.compile", cat="synth"):
+        compiled = lowered.compile()
     t2 = time.perf_counter()
     try:
         from repro.kernels._compat import first_cost_analysis
@@ -303,12 +319,33 @@ def _analyze_compiled(fwd, params, u: jax.ShapeDtypeStruct):
         )
     except Exception:
         peak = None
-    return t1 - t0, t2 - t1, len(lowered.as_text()), flops, peak
+    return t1 - t0, t2 - t1, len(lowered.as_text()), flops, peak, compiled
+
+
+def _measure_compiled(compiled, params, u_shape, key: str) -> None:
+    """Time one real execution of the compiled program (warmup + best-of-2)
+    into the process ledger — the *measured* column of the Fig. 10 loop,
+    taken through the same span layer the serving stack uses."""
+    O = obs_lib.OBS
+    u0 = np.zeros(u_shape, np.float32)
+    try:
+        with O.tracer.span("synth.measure", cat="synth",
+                           args={"program": key}):
+            jax.block_until_ready(compiled(params, u0))      # warmup
+            for _ in range(2):
+                t0 = time.perf_counter()
+                jax.block_until_ready(compiled(params, u0))
+                O.ledger.measure(key, time.perf_counter() - t0)
+    except Exception:
+        # measurement is telemetry, never a synthesis failure (e.g. AOT
+        # executables that reject host arrays on exotic backends)
+        pass
 
 
 def synthesize(spec: NetworkSpec, batch: int | None = None,
                backend: str = "xla", *,
-               double_buffer: bool = True) -> SynthesisReport:
+               double_buffer: bool = True,
+               measure: bool = True) -> SynthesisReport:
     """spec → IR program → {XLA scan, fused Pallas kernel, Verilog RTL}.
 
     All backends consume the same :mod:`repro.codegen` program, so
@@ -317,17 +354,28 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     resource report cross-checked against ``compiled.cost_analysis()``.
     ``double_buffer`` forwards to the pallas backend (2-slot ROM prefetch
     vs BlockSpec streaming).  Results are memoized by :func:`_cache_key`.
+
+    Every first-time synthesis feeds the process observability scope
+    (:data:`repro.obs.OBS`): compile/cache-hit spans and counters, plus a
+    predicted-vs-measured ledger row joining the rtlsim FSM cycle estimate
+    and ``cost_analysis`` flops against measured wall-clock
+    (``measure=False`` skips the timed execution).
     """
     from repro import codegen
 
+    O = obs_lib.OBS
     if backend not in codegen.BACKENDS:
         raise ValueError(
             f"unknown backend '{backend}'; available: {codegen.BACKENDS}")
     key = _cache_key(spec, batch, backend, double_buffer)
     if key in _SYNTH_CACHE:
+        O.metrics.counter("synth_cache", "synthesize() memo", result="hit").inc()
         return dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
+    O.metrics.counter("synth_cache", "synthesize() memo", result="miss").inc()
 
-    program = codegen.build_program(spec)
+    with O.tracer.span("synth.build_program", cat="synth",
+                       args={"spec": spec.name, "backend": backend}):
+        program = codegen.build_program(spec)
     quant = _quant_analysis(spec, backend, program)
 
     lut = None
@@ -350,7 +398,19 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     if spec.c_slow > 1:  # C interleaved streams through the one datapath
         u_shape = (spec.c_slow,) + u_shape
     u = jax.ShapeDtypeStruct(u_shape, jnp.float32)
-    lower_s, compile_s, hlo_bytes, flops, peak = _analyze_compiled(fwd, params, u)
+    lower_s, compile_s, hlo_bytes, flops, peak, compiled = \
+        _analyze_compiled(fwd, params, u)
+
+    # predicted-vs-measured ledger: the Fig. 10 loop's instrumentation
+    lkey = _ledger_key(spec, batch, backend)
+    O.ledger.predict(
+        lkey,
+        fsm_cycles=codegen.rtlsim.fsm_cycle_estimate(program),
+        flops=flops, peak_bytes=peak, hlo_bytes=hlo_bytes,
+        compile_s=compile_s, num_params=program.num_params(),
+    )
+    if measure:
+        _measure_compiled(compiled, params, u_shape, lkey)
 
     rtl = resources = None
     if backend == "verilog":

@@ -27,6 +27,8 @@ import numpy as np
 
 from repro import optim
 from repro.configs import ARCH_IDS, get_config
+from repro.obs import log
+from repro.obs.log import fmt_or_na
 from repro.launch import steps as steps_lib
 from repro.launch.mesh import make_production_mesh
 from repro.models.config import ALL_SHAPES, applicable_shapes
@@ -209,7 +211,7 @@ def main() -> int:
             fname = os.path.join(args.out, f"{arch}__{shape}__{mesh_name}"
                                  + (f"__{args.tag}" if args.tag else "") + ".json")
             if args.skip_existing and os.path.exists(fname):
-                print(f"[skip] {arch} {shape} {mesh_name}")
+                log.info(f"[skip] {arch} {shape} {mesh_name}")
                 continue
             try:
                 overrides = {}
@@ -227,13 +229,17 @@ def main() -> int:
                                seq_axis=args.seq_axis)
                 rec["tag"] = args.tag
                 p = save_record(rec, args.out)
-                print(f"[ok]   {arch} {shape} {mesh_name} "
-                      f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
-                      f"flops={rec.get('cost_analysis', {}).get('flops', 'n/a'):.3e} "
-                      f"-> {p}")
+                # cost_analysis may omit flops entirely (backend-dependent);
+                # fmt_or_na renders the missing case as "n/a" instead of
+                # crashing the whole sweep on a format spec.
+                flops_s = fmt_or_na(
+                    rec.get("cost_analysis", {}).get("flops"))
+                log.info(f"[ok]   {arch} {shape} {mesh_name} "
+                         f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
+                         f"flops={flops_s} -> {p}")
             except Exception:
                 failures += 1
-                print(f"[FAIL] {arch} {shape} {mesh_name}")
+                log.info(f"[FAIL] {arch} {shape} {mesh_name}")
                 traceback.print_exc()
     return 1 if failures else 0
 

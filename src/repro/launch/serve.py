@@ -2,6 +2,15 @@
 request stream (see examples/serve_batched.py for the walkthrough).
 
     python -m repro.launch.serve --arch falcon-mamba-7b --smoke --requests 16
+
+Observability (README §Observability):
+
+    python -m repro.launch.serve --trace-out trace.json --metrics-out metrics.json
+
+``--trace-out`` enables span tracing and writes a Chrome-trace-event JSON
+loadable in Perfetto (https://ui.perfetto.dev); ``--metrics-out`` writes the
+metrics-registry snapshot + predicted-vs-measured ledger, schema-checkable
+with ``python -m repro.obs.check``.
 """
 
 from __future__ import annotations
@@ -26,6 +35,10 @@ def main() -> None:
                     help="radix prefix-cache byte budget in MB (0 = off)")
     ap.add_argument("--scheduler", choices=["priority", "fifo"],
                     default="priority")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="enable tracing; write Perfetto-loadable trace JSON")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write metrics snapshot + ledger JSON")
     args = ap.parse_args()
 
     import time
@@ -33,17 +46,21 @@ def main() -> None:
     import jax
     import numpy as np
 
+    from repro import obs as obs_lib
     from repro.configs import get_smoke_config
     from repro.models import lm
+    from repro.obs import log
     from repro.runtime import DecodeServer, Request, SchedulerConfig
 
+    obs = obs_lib.Observability(trace=bool(args.trace_out))
     cfg = get_smoke_config(args.arch)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
                           block_k=args.block_k, persistent=args.persistent,
                           prefill_chunk=args.prefill_chunk,
                           prefix_cache_bytes=args.prefix_cache << 20,
-                          scheduler=SchedulerConfig(policy=args.scheduler))
+                          scheduler=SchedulerConfig(policy=args.scheduler),
+                          obs=obs)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
@@ -53,9 +70,20 @@ def main() -> None:
     done = server.run_until_drained()
     wall = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
-    print(f"served {len(done)} requests, {toks} tokens, {wall:.2f}s "
-          f"({toks / wall:.1f} tok/s, "
-          f"{server.stats()['syncs_per_token']:.3f} syncs/token)")
+    stats = server.stats()
+    log.info(f"served {len(done)} requests, {toks} tokens, {wall:.2f}s "
+             f"({toks / wall:.1f} tok/s, "
+             f"{stats['syncs_per_token']:.3f} syncs/token)")
+    if args.trace_out:
+        obs.export_trace(args.trace_out)
+        log.info(f"wrote trace ({len(obs.tracer.events())} events) -> "
+                 f"{args.trace_out}")
+    if args.metrics_out:
+        # the serve-side registry snapshot, plus the process-global ledger
+        # (synthesis predicted-vs-measured rows, if any synthesize() ran)
+        obs.export_metrics(args.metrics_out, stats=stats,
+                           ledger=obs_lib.OBS.ledger)
+        log.info(f"wrote metrics snapshot -> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -45,9 +45,12 @@ def main() -> None:
                              total_steps=args.steps)
     dcfg = DataConfig(vocab=cfg.vocab, seq_len=args.seq, global_batch=args.batch)
 
+    from repro.obs import log
+
     trainer = Trainer(cfg, tcfg, ocfg, dcfg)
     res = trainer.run(resume=not args.no_resume)
-    print(f"final_loss={res['final_loss']:.4f} entropy_floor={res['entropy_floor']:.4f}")
+    log.info(f"final_loss={res['final_loss']:.4f} "
+             f"entropy_floor={res['entropy_floor']:.4f}")
     if args.metrics_out:
         trainer.dump_metrics(args.metrics_out)
 

@@ -1,0 +1,105 @@
+"""Unified observability: metrics registry, span tracing, predicted-vs-
+measured ledger, leveled logging.
+
+The paper's Fig. 10 design flow is a *measure-then-explore* loop; this
+package is the measuring half, shared by the serving and codegen stacks:
+
+* :class:`~repro.obs.metrics.MetricsRegistry` — counters / gauges /
+  histograms (p50/p95/p99), labeled, thread-safe, snapshot + Prometheus
+  text + JSON export.  ``DecodeServer.stats()``, ``Scheduler.telemetry()``
+  and ``PrefixCache.telemetry()`` are thin views over one of these.
+* :class:`~repro.obs.trace.Tracer` — Chrome-trace/Perfetto span export with
+  per-request timelines (queue wait → prefill chunks → decode → retire) and
+  device-sync / ROM-prefetch / compile annotations.  Disabled by default
+  and near-free when disabled; never called from inside jitted code.
+* :class:`~repro.obs.ledger.Ledger` — joins predicted cost (rtlsim
+  ``fsm_cycles``, ``cost_analysis`` flops/bytes) against measured wall
+  clock per synthesized program: the input the design-space auto-tuner
+  (ROADMAP) will rank candidates by.
+* :mod:`~repro.obs.log` — ``REPRO_LOG=quiet|info|debug`` structured logging
+  replacing the library's bare prints.
+
+Scoping: components that must not share accounting (each ``DecodeServer``,
+each benchmark scenario) own an :class:`Observability` instance; process-
+wide work (synthesis memo, pallas compiles) records into the module-global
+:data:`OBS`.
+"""
+
+from __future__ import annotations
+
+import json
+
+from . import log
+from .ledger import Ledger
+from .metrics import Counter, Gauge, Histogram, MetricsRegistry
+from .trace import Tracer
+
+METRICS_SCHEMA = "repro.metrics/v1"
+
+
+class Observability:
+    """One scope of accounting: a registry + tracer + ledger that reset and
+    export together."""
+
+    def __init__(self, *, trace: bool = False):
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(enabled=trace)
+        self.ledger = Ledger()
+
+    @property
+    def tracing(self) -> bool:
+        return self.tracer.enabled
+
+    def reset(self) -> None:
+        self.metrics.reset()
+        self.tracer.reset()
+        self.ledger.reset()
+
+    # -- export ------------------------------------------------------------
+
+    def export_trace(self, path: str | None = None) -> dict:
+        """Chrome-trace JSON (Perfetto-loadable); written when ``path``."""
+        return self.tracer.export(path)
+
+    def export_metrics(self, path: str | None = None, *,
+                       stats: dict | None = None,
+                       ledger: "Ledger | None" = None) -> dict:
+        """Metrics document: registry snapshot + predicted-vs-measured
+        ledger (+ an optional server ``stats()`` view for cross-checking).
+        ``ledger`` defaults to this scope's; pass :data:`OBS.ledger <OBS>`
+        to export the process-wide synthesis ledger instead."""
+        led = self.ledger if ledger is None else ledger
+        doc = {"schema": METRICS_SCHEMA,
+               "metrics": self.metrics.snapshot(),
+               "ledger": led.report()}
+        if stats is not None:
+            doc["stats"] = stats
+        if path is not None:
+            with open(path, "w") as fh:
+                json.dump(doc, fh, indent=1, default=str)
+        return doc
+
+
+# Process-global scope: synthesis/codegen instrumentation (mirrors the
+# process-wide _SYNTH_CACHE memo).  Serving components default to their own
+# per-instance scope — see DecodeServer(obs=...).
+OBS = Observability()
+
+
+def get() -> Observability:
+    return OBS
+
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "Ledger",
+    "METRICS_SCHEMA",
+    "MetricsRegistry",
+    "OBS",
+    "Observability",
+    "Tracer",
+    "get",
+    "log",
+]

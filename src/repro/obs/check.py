@@ -1,0 +1,135 @@
+"""Schema checks for exported observability artifacts.
+
+CI runs this over the serve launcher's ``trace.json`` / ``metrics.json``
+artifacts so a malformed export (an event missing ``ts``, a histogram
+snapshot without percentiles, a ledger row without a program id) fails the
+build instead of silently producing a Perfetto file that won't load.
+
+    python -m repro.obs.check trace.json metrics.json
+
+Files are dispatched on content: a top-level ``traceEvents`` key is checked
+as a Chrome trace, anything else as a metrics document.
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+
+_NUM = (int, float)
+
+TRACE_PHASES = {"X", "B", "E", "i", "I", "C", "M", "b", "e", "n", "s", "t", "f"}
+
+
+def check_trace_doc(doc) -> list[str]:
+    """Validate the Chrome-trace-event JSON object format."""
+    errs: list[str] = []
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        return ["trace: top level must be an object with 'traceEvents'"]
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        return ["trace: 'traceEvents' must be a list"]
+    for i, ev in enumerate(events):
+        where = f"trace: event[{i}]"
+        if not isinstance(ev, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        ph = ev.get("ph")
+        if ph not in TRACE_PHASES:
+            errs.append(f"{where} has unknown phase {ph!r}")
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            errs.append(f"{where} missing 'name'")
+        for key in ("pid", "tid"):
+            if not isinstance(ev.get(key), int):
+                errs.append(f"{where} missing integer '{key}'")
+        if not isinstance(ev.get("ts"), _NUM):
+            errs.append(f"{where} missing numeric 'ts'")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, _NUM) or dur < 0:
+                errs.append(f"{where} complete event needs 'dur' >= 0")
+        if ph in ("C", "M") and not isinstance(ev.get("args"), dict):
+            errs.append(f"{where} phase {ph!r} needs an 'args' object")
+    return errs
+
+
+def check_metrics_doc(doc) -> list[str]:
+    """Validate a metrics export: registry snapshot (+ optional stats and
+    predicted-vs-measured ledger sections)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["metrics: top level must be an object"]
+    snap = doc.get("metrics")
+    if not isinstance(snap, dict):
+        return ["metrics: missing 'metrics' registry snapshot object"]
+    for kind in ("counters", "gauges"):
+        vals = snap.get(kind, {})
+        if not isinstance(vals, dict):
+            errs.append(f"metrics: '{kind}' must be an object")
+            continue
+        for name, v in vals.items():
+            if not isinstance(v, _NUM):
+                errs.append(f"metrics: {kind}[{name}] is not numeric")
+    hists = snap.get("histograms", {})
+    if not isinstance(hists, dict):
+        errs.append("metrics: 'histograms' must be an object")
+        hists = {}
+    for name, h in hists.items():
+        if not isinstance(h, dict):
+            errs.append(f"metrics: histograms[{name}] is not an object")
+            continue
+        for key in ("count", "sum", "p50", "p95", "p99"):
+            if key not in h:
+                errs.append(f"metrics: histograms[{name}] missing '{key}'")
+            elif h[key] is not None and not isinstance(h[key], _NUM):
+                errs.append(f"metrics: histograms[{name}].{key} not numeric")
+    ledger = doc.get("ledger", [])
+    if not isinstance(ledger, list):
+        errs.append("metrics: 'ledger' must be a list")
+        ledger = []
+    for i, row in enumerate(ledger):
+        if not isinstance(row, dict) or not isinstance(row.get("program"), str):
+            errs.append(f"metrics: ledger[{i}] needs a string 'program'")
+            continue
+        for key in ("fsm_cycles", "flops", "measured_wall_us"):
+            if key not in row:
+                errs.append(f"metrics: ledger[{i}] missing '{key}'")
+    if "stats" in doc and not isinstance(doc["stats"], dict):
+        errs.append("metrics: 'stats' must be an object")
+    return errs
+
+
+def check_file(path: str) -> list[str]:
+    try:
+        with open(path) as fh:
+            doc = json.load(fh)
+    except (OSError, ValueError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if isinstance(doc, dict) and "traceEvents" in doc:
+        errs = check_trace_doc(doc)
+    else:
+        errs = check_metrics_doc(doc)
+    return [f"{path}: {e}" for e in errs]
+
+
+def main(argv: list[str] | None = None) -> int:
+    from . import log
+
+    argv = sys.argv[1:] if argv is None else argv
+    if not argv:
+        log.warning("usage: python -m repro.obs.check FILE [FILE ...]")
+        return 2
+    failures = 0
+    for path in argv:
+        errs = check_file(path)
+        if errs:
+            failures += 1
+            for e in errs:
+                log.warning(e)
+        else:
+            log.info(f"[ok] {path}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

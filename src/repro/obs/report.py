@@ -1,0 +1,54 @@
+"""Predicted-vs-measured report CLI — one turn of the Fig. 10 loop.
+
+Synthesizes a small spec sweep through the requested backends (populating
+the process-global ledger: rtlsim ``fsm_cycles`` + ``cost_analysis`` flops
+predicted, wall-clock measured through the span layer), then prints the
+joined table and optionally writes it as JSON.
+
+    python -m repro.obs.report [--backends xla pallas] [--out ledger.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backends", nargs="*", default=["xla", "pallas"])
+    ap.add_argument("--cells", nargs="*", default=["mlp", "gru"])
+    ap.add_argument("--seq-len", type=int, default=8)
+    ap.add_argument("--quant-bits", type=int, default=0,
+                    help="also sweep this fixed-point width (0 = fp only)")
+    ap.add_argument("--out", default="",
+                    help="write the joined ledger rows to this JSON file")
+    args = ap.parse_args(argv)
+
+    from repro import obs
+    from repro.core.synthesis import NetworkSpec, synthesize
+    from repro.obs import log
+
+    for cell in args.cells:
+        specs = [NetworkSpec(4, 2, 8, 2, cell=cell,
+                             seq_len=0 if cell == "mlp" else args.seq_len)]
+        if args.quant_bits:
+            specs.append(specs[0].__class__(
+                **{**specs[0].__dict__, "quant_bits": args.quant_bits}))
+        for spec in specs:
+            for backend in args.backends:
+                try:
+                    synthesize(spec, batch=2, backend=backend)
+                except ValueError as e:  # e.g. unsupported quant × backend
+                    log.debug(f"skip {spec.name}|{backend}: {e}")
+    rows = obs.OBS.ledger.report()
+    log.info(obs.OBS.ledger.format_table())
+    if args.out:
+        with open(args.out, "w") as fh:
+            json.dump(rows, fh, indent=1)
+        log.info(f"wrote {args.out}")
+    return 0 if rows else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -31,6 +31,8 @@ from typing import Any, Sequence
 
 import jax
 
+from repro.obs import MetricsRegistry
+
 PyTree = Any
 
 
@@ -85,23 +87,37 @@ def _common_len(a: tuple[int, ...], b: Sequence[int]) -> int:
 class PrefixCache:
     """Radix tree of prompt prefixes with LRU byte-budget eviction."""
 
-    def __init__(self, budget_bytes: int = 256 << 20):
+    def __init__(self, budget_bytes: int = 256 << 20,
+                 metrics: MetricsRegistry | None = None):
         self.budget_bytes = int(budget_bytes)
         self.root = _Node()
         self.bytes_in_use = 0
         self._clock = 0
         self._entry_nodes: set[_Node] = set()   # incremental registry — no
         # tree walks on the admission hot path (insert/evict/telemetry)
-        self.stats = {
-            "hits": 0,            # full-prompt hits (0 prompt steps recomputed)
-            "partial_hits": 0,    # resumed mid-prompt
-            "misses": 0,
-            "insertions": 0,
-            "evictions": 0,
-            "prompt_steps_saved": 0,
-        }
+        # Hit/miss/eviction accounting lives in a MetricsRegistry (pass the
+        # owning server's to share a scope); telemetry() is a view over it.
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_hits = m.counter(
+            "prefix_hits", "full-prompt hits (0 prompt steps recomputed)")
+        self._c_partial = m.counter("prefix_partial_hits",
+                                    "resumed mid-prompt")
+        self._c_misses = m.counter("prefix_misses", "no usable checkpoint")
+        self._c_insertions = m.counter("prefix_insertions",
+                                       "checkpoints stored")
+        self._c_evictions = m.counter("prefix_evictions",
+                                      "checkpoints dropped (LRU budget)")
+        self._c_saved = m.counter("prefix_prompt_steps_saved",
+                                  "prompt steps served from checkpoints")
+        self._g_bytes = m.gauge("prefix_bytes_in_use", "stored state bytes")
+        self._g_entries = m.gauge("prefix_entries", "stored checkpoints")
 
     # -- internal ----------------------------------------------------------
+
+    def _track(self) -> None:
+        self._g_bytes.set(self.bytes_in_use)
+        self._g_entries.set(len(self._entry_nodes))
 
     def _evict_to_budget(self) -> None:
         while self.bytes_in_use > self.budget_bytes and self._entry_nodes:
@@ -109,8 +125,9 @@ class PrefixCache:
             self.bytes_in_use -= node.entry.nbytes
             node.entry = None
             self._entry_nodes.discard(node)
-            self.stats["evictions"] += 1
+            self._c_evictions.inc()
             self._prune(node)
+        self._track()
 
     def _prune(self, node: _Node) -> None:
         """Unlink entry-less dead wood after an eviction, so the tree's
@@ -168,7 +185,7 @@ class PrefixCache:
         node.entry = entry
         self._entry_nodes.add(node)
         self.bytes_in_use += entry.nbytes
-        self.stats["insertions"] += 1
+        self._c_insertions.inc()
         self._evict_to_budget()
 
     def lookup(self, tokens: Sequence[int]) -> list[CacheEntry]:
@@ -198,13 +215,37 @@ class PrefixCache:
         return sorted(found, key=lambda e: -e.length)
 
     def record_hit(self, steps_saved: int, *, full: bool) -> None:
-        self.stats["hits" if full else "partial_hits"] += 1
-        self.stats["prompt_steps_saved"] += int(steps_saved)
+        """One admission decision: a full hit (whole prompt spliced) or a
+        partial hit (resumed mid-prompt).  Callers record exactly ONE of
+        hit/partial/miss per admission — a partial-then-full sequence across
+        two admissions of the same prompt is two decisions, saving
+        ``start + plen`` steps in total, not a double count (see
+        ``tests/test_obs.py::test_partial_then_full_hit_accounting``)."""
+        (self._c_hits if full else self._c_partial).inc()
+        self._c_saved.inc(int(steps_saved))
 
     def record_miss(self) -> None:
-        self.stats["misses"] += 1
+        self._c_misses.inc()
+
+    @property
+    def stats(self) -> dict:
+        """Back-compat view of the registry (the pre-obs dict shape)."""
+        return {
+            "hits": self._c_hits.value,
+            "partial_hits": self._c_partial.value,
+            "misses": self._c_misses.value,
+            "insertions": self._c_insertions.value,
+            "evictions": self._c_evictions.value,
+            "prompt_steps_saved": self._c_saved.value,
+        }
 
     def telemetry(self) -> dict:
+        self._track()
         return dict(self.stats, bytes_in_use=self.bytes_in_use,
                     budget_bytes=self.budget_bytes,
                     entries=len(self._entry_nodes))
+
+    def reset_stats(self) -> None:
+        """Zero the counters; stored checkpoints are untouched."""
+        self.metrics.reset()
+        self._track()

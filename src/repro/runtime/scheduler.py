@@ -30,6 +30,8 @@ import time
 from collections import deque
 from typing import TYPE_CHECKING
 
+from repro.obs import MetricsRegistry
+
 if TYPE_CHECKING:  # pragma: no cover
     from .server import DecodeServer, Request
 
@@ -49,28 +51,37 @@ class SchedulerConfig:
 
 
 class Scheduler:
-    """Priority/aging queue with admission control."""
+    """Priority/aging queue with admission control.
+
+    Counters live in a :class:`repro.obs.MetricsRegistry` (pass the owning
+    server's to share one accounting scope); :meth:`telemetry` is a thin
+    view over it, shape-compatible with the pre-registry stats dict.
+    """
 
     def __init__(self, cfg: SchedulerConfig | None = None,
-                 prompt_limit: int = 0):
+                 prompt_limit: int = 0,
+                 metrics: MetricsRegistry | None = None):
         self.cfg = cfg or SchedulerConfig()
         self.prompt_limit = self.cfg.max_prompt_tokens or prompt_limit
         self._queues: dict[int, deque] = {}
         self._size = 0
-        self.stats = {
-            "submitted": 0,
-            "admitted": 0,
-            "rejected": {},          # reason -> count
-            "truncated": 0,
-            "dispatched": 0,
-            "max_wait_s": 0.0,
-        }
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        m = self.metrics
+        self._c_submitted = m.counter("sched_submitted", "requests offered")
+        self._c_admitted = m.counter("sched_admitted", "requests enqueued")
+        self._c_truncated = m.counter("sched_truncated",
+                                      "over-length prompts cut to the limit")
+        self._c_dispatched = m.counter("sched_dispatched",
+                                       "requests handed to a slot")
+        self._g_max_wait = m.gauge("sched_max_wait_s",
+                                   "worst queue wait since reset")
+        self._g_pending = m.gauge("sched_pending", "requests queued")
 
     # -- admission ---------------------------------------------------------
 
     def admit(self, req: "Request", now: float | None = None) -> tuple[bool, str | None]:
         """Validate and enqueue.  Returns (admitted, reject_reason)."""
-        self.stats["submitted"] += 1
+        self._c_submitted.inc()
         reason = None
         if not req.prompt:
             reason = REJECT_EMPTY_PROMPT
@@ -80,17 +91,19 @@ class Scheduler:
             if self.cfg.overflow == "truncate":
                 req.prompt = req.prompt[: self.prompt_limit]
                 req.truncated = True
-                self.stats["truncated"] += 1
+                self._c_truncated.inc()
             else:
                 reason = REJECT_PROMPT_TOO_LONG
         if reason is not None:
-            self.stats["rejected"][reason] = self.stats["rejected"].get(reason, 0) + 1
+            self.metrics.counter("sched_rejected", "admission rejections",
+                                 reason=reason).inc()
             req.finish_reason = f"rejected:{reason}"
             return False, reason
-        self.stats["admitted"] += 1
+        self._c_admitted.inc()
         req.submitted_at = now if now is not None else time.perf_counter()
         self._queues.setdefault(int(req.priority), deque()).append(req)
         self._size += 1
+        self._g_pending.set(self._size)
         return True, None
 
     # -- dispatch ----------------------------------------------------------
@@ -113,17 +126,37 @@ class Scheduler:
         )
         req = self._queues[best_cls].popleft()
         self._size -= 1
-        self.stats["dispatched"] += 1
-        self.stats["max_wait_s"] = max(self.stats["max_wait_s"],
-                                       now - req.submitted_at)
+        self._g_pending.set(self._size)
+        self._c_dispatched.inc()
+        self._g_max_wait.set_max(now - req.submitted_at)
+        req.dispatched_at = now
         return req
 
     def __len__(self) -> int:
         return self._size
 
+    @property
+    def stats(self) -> dict:
+        """Back-compat view of the registry (the pre-obs dict shape)."""
+        return {
+            "submitted": self._c_submitted.value,
+            "admitted": self._c_admitted.value,
+            "rejected": {c.labels["reason"]: c.value
+                         for c in self.metrics.children("sched_rejected")
+                         if c.value},
+            "truncated": self._c_truncated.value,
+            "dispatched": self._c_dispatched.value,
+            "max_wait_s": self._g_max_wait.value,
+        }
+
     def telemetry(self) -> dict:
         return dict(self.stats, pending=self._size,
                     policy=self.cfg.policy, aging_rate=self.cfg.aging_rate)
+
+    def reset_stats(self) -> None:
+        """Zero the counters (queue contents are untouched)."""
+        self.metrics.reset()
+        self._g_pending.set(self._size)
 
 
 class AsyncServer:

@@ -48,6 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_lib
 from repro.models import lm
 from repro.models.config import ModelConfig
 
@@ -121,6 +122,7 @@ class Request:
     priority: int = 1          # scheduler class; smaller = more urgent
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
+    dispatched_at: float | None = None   # popped from the queue (slot found)
     first_token_at: float | None = None
     done_at: float | None = None
     finish_reason: str | None = None
@@ -146,7 +148,8 @@ class DecodeServer:
                  prefill_chunk: int = 0,
                  prefix_cache_bytes: int = 0,
                  scheduler: Scheduler | SchedulerConfig | None = None,
-                 prefill_chunks_per_tick: int = 1):
+                 prefill_chunks_per_tick: int = 1,
+                 obs: obs_lib.Observability | None = None):
         self.cfg, self.params = cfg, params
         self.B, self.S = num_slots, max_seq
         self.eos_id = eos_id
@@ -154,13 +157,20 @@ class DecodeServer:
         self.persistent = persistent
         self.prefill_chunk = int(prefill_chunk)
         self.prefill_chunks_per_tick = max(1, int(prefill_chunks_per_tick))
-        self.prefix_cache = (PrefixCache(prefix_cache_bytes)
+        # Per-server observability scope: counters always on (they ARE the
+        # stats() numbers), tracing opt-in (obs=Observability(trace=True)).
+        self.obs = obs if obs is not None else obs_lib.Observability()
+        self._tr = self.obs.tracer
+        self._tr.thread_name(0, "server")
+        self.prefix_cache = (PrefixCache(prefix_cache_bytes,
+                                         metrics=self.obs.metrics)
                              if prefix_cache_bytes else None)
         if isinstance(scheduler, Scheduler):
             self.scheduler = scheduler
             self.scheduler.prompt_limit = self.scheduler.prompt_limit or (max_seq - 1)
         else:
-            self.scheduler = Scheduler(scheduler, prompt_limit=max_seq - 1)
+            self.scheduler = Scheduler(scheduler, prompt_limit=max_seq - 1,
+                                       metrics=self.obs.metrics)
         self.caches = lm.init_cache(cfg, num_slots, max_seq)
         self.pos = np.zeros(num_slots, np.int32)        # next write position
         self.live = np.zeros(num_slots, bool)
@@ -177,17 +187,50 @@ class DecodeServer:
         self._block_fns: dict[int, Callable] = {}       # K -> jitted K-step loop
         self._jobs: list[_PrefillJob] = []
         self._job_rr = 0                                # round-robin cursor
-        # decode-phase telemetry (prefill excluded): the acceptance metric is
-        # host round-trips per generated token.  Both modes amortize over the
+        # Telemetry lives in the per-server registry; handles are cached here
+        # so the hot loop never does a registry lookup.  Decode-phase sync
+        # accounting (prefill excluded): the acceptance metric is host
+        # round-trips per generated token.  Both modes amortize over the
         # live slots, so step() reports ~1/live and step_block() ~1/(K·live);
         # at equal occupancy the persistent/legacy ratio is the K× win.
-        self.decode_syncs = 0
-        self.decoded_tokens = 0
+        m = self.obs.metrics
+        self._m_syncs = m.counter("decode_syncs",
+                                  "host round-trips in the decode phase")
+        self._m_tokens = m.counter("decoded_tokens", "tokens generated")
         # prefill-phase telemetry: per-tick boundedness + cache savings
-        self.prompt_steps_computed = 0
-        self.prefill_chunks_run = 0
-        self.max_prompt_steps_per_tick = 0
+        self._m_prompt_steps = m.counter("prompt_steps_computed",
+                                         "prompt tokens run on device")
+        self._m_chunks = m.counter("prefill_chunks_run", "chunk dispatches")
+        self._m_tick_max = m.gauge(
+            "max_prompt_steps_per_tick",
+            "high-watermark of per-tick prompt work (boundedness proof)")
+        self._m_live = m.gauge("live_slots", "slots decoding")
+        self._h_ttft = m.histogram("ttft_ms", "submit -> first token")
+        self._h_tpot = m.histogram("tpot_ms", "per-token decode latency")
+        self._h_queue = m.histogram("queue_wait_ms", "submit -> dispatch")
         self._tick_prompt_steps = 0
+
+    # registry-backed views of the pre-obs counter attributes ---------------
+
+    @property
+    def decode_syncs(self) -> int:
+        return int(self._m_syncs.value)
+
+    @property
+    def decoded_tokens(self) -> int:
+        return int(self._m_tokens.value)
+
+    @property
+    def prompt_steps_computed(self) -> int:
+        return int(self._m_prompt_steps.value)
+
+    @property
+    def prefill_chunks_run(self) -> int:
+        return int(self._m_chunks.value)
+
+    @property
+    def max_prompt_steps_per_tick(self) -> int:
+        return int(self._m_tick_max.value)
 
     # ------------------------------------------------------------------
     # admission
@@ -200,8 +243,7 @@ class DecodeServer:
         req.submitted_at = now
         admitted, _reason = self.scheduler.admit(req, now=now)
         if not admitted:
-            req.done_at = now
-            self.completed.append(req)
+            self._retire(req, now, req.finish_reason)
         return admitted
 
     def _free_slot(self) -> int | None:
@@ -214,6 +256,49 @@ class DecodeServer:
         req.done_at = now
         req.finish_reason = req.finish_reason or reason
         self.completed.append(req)
+        self._observe_retire(req, now)
+
+    def _observe_retire(self, req: Request, now: float) -> None:
+        """Latency metrics + the retroactive per-request trace track.
+
+        TTFT/TPOT are *derived from the same timestamps the spans carry*, so
+        the metrics snapshot and the trace always agree.  Spans land on track
+        ``tid = uid + 1``: a ``request`` span containing queue_wait →
+        prefill → decode children (parent/child by timestamp containment,
+        per the Chrome trace-event format)."""
+        self.obs.metrics.counter(
+            "requests_completed", "retired requests by finish reason",
+            reason=(req.finish_reason or "unknown").split(":")[0]).inc()
+        n_out = len(req.out_tokens)
+        if req.first_token_at is not None:
+            self._h_ttft.observe((req.first_token_at - req.submitted_at) * 1e3)
+            if n_out > 1 and req.done_at is not None:
+                self._h_tpot.observe(
+                    (req.done_at - req.first_token_at) / (n_out - 1) * 1e3)
+        if req.dispatched_at is not None:
+            self._h_queue.observe((req.dispatched_at - req.submitted_at) * 1e3)
+        tr = self._tr
+        if not tr.enabled:
+            return
+        tid = req.uid + 1
+        tr.thread_name(tid, f"req {req.uid}")
+        t_sub = tr.to_us(req.submitted_at)
+        t_done = max(tr.to_us(now), t_sub)
+        tr.complete("request", t_sub, t_done - t_sub, cat="request", tid=tid,
+                    args={"uid": req.uid, "prompt_tokens": len(req.prompt),
+                          "out_tokens": n_out,
+                          "finish_reason": req.finish_reason,
+                          "prefix_hit_tokens": req.prefix_hit_tokens})
+        t_disp = min(tr.to_us(req.dispatched_at), t_done) \
+            if req.dispatched_at is not None else t_done
+        tr.complete("queue_wait", t_sub, t_disp - t_sub, cat="request",
+                    tid=tid)
+        if req.first_token_at is not None:
+            t_first = min(tr.to_us(req.first_token_at), t_done)
+            tr.complete("prefill", t_disp, t_first - t_disp, cat="request",
+                        tid=tid)
+            tr.complete("decode", t_first, t_done - t_first, cat="request",
+                        tid=tid, args={"tokens": n_out})
 
     def _start_request(self, req: Request, b: int, first_logits: np.ndarray) -> None:
         """Go live after the prompt state is in slot ``b`` — or retire at
@@ -334,8 +419,10 @@ class DecodeServer:
             if self.prefix_cache is not None:
                 self.prefix_cache.record_miss()
             toks = jnp.asarray(np.array(req.prompt, np.int32)[None])
-            logits, pc = self._prefill(self.params, toks)
-            self.prompt_steps_computed += plen
+            with self._tr.span("prefill_oneshot", cat="prefill",
+                               args={"uid": req.uid, "tokens": plen}):
+                logits, pc = self._prefill(self.params, toks)
+            self._m_prompt_steps.inc(plen)
             self._tick_prompt_steps += plen
             self.caches = splice_cache(self.caches, pc, b, plen, self.S)
             if self.prefix_cache is not None:
@@ -360,12 +447,15 @@ class DecodeServer:
             c = min(self.prefill_chunk, plen - job.pos)
             toks = jnp.asarray(
                 np.array(job.req.prompt[job.pos:job.pos + c], np.int32)[None])
-            job.logits, job.caches = self._chunk_fn(c)(
-                self.params, toks, job.caches, jnp.int32(job.pos))
+            with self._tr.span("prefill_chunk", cat="prefill",
+                               args={"uid": job.req.uid, "pos": job.pos,
+                                     "chunk": c}):
+                job.logits, job.caches = self._chunk_fn(c)(
+                    self.params, toks, job.caches, jnp.int32(job.pos))
             job.pos += c
-            self.prompt_steps_computed += c
+            self._m_prompt_steps.inc(c)
             self._tick_prompt_steps += c
-            self.prefill_chunks_run += 1
+            self._m_chunks.inc()
             self._cache_boundary(job)
             if job.pos >= plen:
                 self._jobs.remove(job)
@@ -382,8 +472,8 @@ class DecodeServer:
         self._admit()
         self._advance_prefill()
         self._admit()   # full-hit admissions may free the tick for decode
-        self.max_prompt_steps_per_tick = max(self.max_prompt_steps_per_tick,
-                                             self._tick_prompt_steps)
+        self._m_tick_max.set_max(self._tick_prompt_steps)
+        self._m_live.set(int(self.live.sum()))
 
     # ------------------------------------------------------------------
     # decode drivers
@@ -394,12 +484,15 @@ class DecodeServer:
         self._begin_tick()
         if not self.live.any():
             return 0
-        toks = jnp.asarray(self.cur_tokens[:, None])
-        logits, self.caches = self._decode(
-            self.params, toks, self.caches, jnp.asarray(self.pos)
-        )
-        logits = np.asarray(logits)
-        self.decode_syncs += 1
+        with self._tr.span("decode_step", cat="decode",
+                           args={"live": int(self.live.sum())}):
+            toks = jnp.asarray(self.cur_tokens[:, None])
+            logits, self.caches = self._decode(
+                self.params, toks, self.caches, jnp.asarray(self.pos)
+            )
+            with self._tr.span("device_sync", cat="sync"):
+                logits = np.asarray(logits)
+        self._m_syncs.inc()
         self.pos += self.live.astype(np.int32)
         now = time.perf_counter()
         for b in range(self.B):
@@ -412,11 +505,11 @@ class DecodeServer:
                 # the int() above is its own host↔device round-trip (the
                 # sampled id travels back) — count it, or the legacy-vs-
                 # persistent sync comparison flatters the legacy path
-                self.decode_syncs += 1
+                self._m_syncs.inc()
             else:
                 nxt = int(np.argmax(logits[b]))
             req.out_tokens.append(nxt)
-            self.decoded_tokens += 1
+            self._m_tokens.inc()
             if req.first_token_at is None:
                 req.first_token_at = now
             self.cur_tokens[b] = nxt
@@ -497,20 +590,23 @@ class DecodeServer:
         remaining = np.array(
             [r.max_new_tokens - len(r.out_tokens) if r is not None else 0
              for r in self.slot_req], np.int32)
-        carry, (toks, emitted, done_now) = fn(
-            self.params, self.caches, jnp.asarray(self.cur_tokens),
-            jnp.asarray(self.pos), jnp.asarray(self.live),
-            jnp.asarray(remaining), jnp.asarray(temps), self.key,
-        )
-        self.caches, cur, pos, live, _, self.key = carry
-        # ONE sync: the K×B block (plus the small carry vectors) to host.
-        toks = np.asarray(toks)
-        emitted = np.asarray(emitted)
-        done_now = np.asarray(done_now)
-        self.cur_tokens = np.array(cur)    # np.array copies: the host mirrors
-        self.pos = np.array(pos)           # stay writable for _admit()
-        self.live = np.array(live)
-        self.decode_syncs += 1
+        with self._tr.span("decode_block", cat="decode",
+                           args={"live": int(self.live.sum()), "k": k}):
+            carry, (toks, emitted, done_now) = fn(
+                self.params, self.caches, jnp.asarray(self.cur_tokens),
+                jnp.asarray(self.pos), jnp.asarray(self.live),
+                jnp.asarray(remaining), jnp.asarray(temps), self.key,
+            )
+            self.caches, cur, pos, live, _, self.key = carry
+            # ONE sync: the K×B block (plus the small carry vectors) to host.
+            with self._tr.span("device_sync", cat="sync"):
+                toks = np.asarray(toks)
+                emitted = np.asarray(emitted)
+                done_now = np.asarray(done_now)
+                self.cur_tokens = np.array(cur)   # np.array copies: the host
+                self.pos = np.array(pos)          # mirrors stay writable for
+                self.live = np.array(live)        # _admit()
+        self._m_syncs.inc()
         now = time.perf_counter()
         for t in range(k):
             for b in range(self.B):
@@ -518,7 +614,7 @@ class DecodeServer:
                     continue
                 req = self.slot_req[b]
                 req.out_tokens.append(int(toks[t, b]))
-                self.decoded_tokens += 1
+                self._m_tokens.inc()
                 if req.first_token_at is None:
                     req.first_token_at = now
                 if done_now[t, b]:
@@ -542,9 +638,17 @@ class DecodeServer:
             self.step()
         return bool(self.live.any() or self._jobs or len(self.scheduler))
 
-    def stats(self) -> dict:
+    def stats(self, reset: bool = False) -> dict:
         """Serving telemetry: decode host round-trips per generated token,
-        prefill boundedness, prefix-cache hit/miss/eviction, scheduler."""
+        prefill boundedness, prefix-cache hit/miss/eviction, scheduler,
+        request-latency summaries.  Every number is a view over the server's
+        :class:`~repro.obs.MetricsRegistry` — ``export_metrics`` snapshots
+        of the same registry therefore always agree with this dict.
+
+        ``reset=True`` zeroes the counters *after* building the dict, so the
+        next call reports a fresh window (stored prefix-cache checkpoints and
+        in-flight queue contents are untouched).
+        """
         toks = max(self.decoded_tokens, 1)
         out = {
             "decode_syncs": self.decode_syncs,
@@ -556,11 +660,28 @@ class DecodeServer:
                 "chunk_size": self.prefill_chunk,
                 "max_prompt_steps_per_tick": self.max_prompt_steps_per_tick,
             },
+            "latency": {
+                "ttft_ms": self._h_ttft.summary(),
+                "tpot_ms": self._h_tpot.summary(),
+                "queue_wait_ms": self._h_queue.summary(),
+            },
             "scheduler": self.scheduler.telemetry(),
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.telemetry()
+        if reset:
+            self.reset_stats()
         return out
+
+    def reset_stats(self) -> None:
+        """Zero every counter/histogram in the server's metrics scope.  The
+        scheduler and prefix cache usually share the scope (one registry), in
+        which case their resets are redundant-but-harmless; they matter when
+        a caller injected a Scheduler with its own registry."""
+        self.obs.metrics.reset()
+        self.scheduler.reset_stats()
+        if self.prefix_cache is not None:
+            self.prefix_cache.reset_stats()
 
     def run_until_drained(self, max_ticks: int = 10_000,
                           persistent: bool | None = None) -> list[Request]:

@@ -33,6 +33,8 @@ from typing import Any
 
 import numpy as np
 
+from repro.obs import log
+
 FLOAT_ATOL = 1e-5
 FLOAT_RTOL = 1e-5
 
@@ -233,12 +235,12 @@ def run_seeds(seeds, verbose: bool = False):
                              bit_exact=False, max_code_delta=-1,
                              error=f"{type(exc).__name__}: {exc}")
         if verbose or not res.ok:
-            print(res.line(), flush=True)
+            log.info(res.line())
         if not res.ok and seed not in XFAILS:
             failures.append(res)
         if res.ok and seed in XFAILS:
-            print(f"[xpass] seed={seed} documented as xfail "
-                  f"({XFAILS[seed]}) but passes — remove it", flush=True)
+            log.info(f"[xpass] seed={seed} documented as xfail "
+                     f"({XFAILS[seed]}) but passes — remove it")
         results.append(res)
     return results, failures
 
@@ -268,7 +270,7 @@ def regen_goldens(out_dir: pathlib.Path) -> list[pathlib.Path]:
         path = out_dir / f"{name}.v"
         path.write_text(emit_program(prog))
         written.append(path)
-        print(f"wrote {path}")
+        log.info(f"wrote {path}")
     return written
 
 
@@ -295,9 +297,9 @@ def main(argv=None) -> int:
     seeds = range(args.start, args.start + args.seeds)
     results, failures = run_seeds(seeds, verbose=args.verbose)
     n_xfail = sum(1 for r in results if not r.ok and r.case.seed in XFAILS)
-    print(f"difftest: {sum(r.ok for r in results)}/{len(results)} ok, "
-          f"{len(failures)} failures, {n_xfail} xfail "
-          f"({time.perf_counter() - t0:.1f}s)")
+    log.info(f"difftest: {sum(r.ok for r in results)}/{len(results)} ok, "
+             f"{len(failures)} failures, {n_xfail} xfail "
+             f"({time.perf_counter() - t0:.1f}s)")
     return 1 if failures else 0
 
 

@@ -8,8 +8,9 @@ Measures, on identical workloads:
   cslow_fused_pallas — ONE generated kernel over the C·B folded batch axis
   gate_fp32 / gate_int8 — generated cell kernel, f32 vs int8 MACC datapath
   serve_mixed_unchunked / serve_mixed_chunked — mixed long/short-prompt
-      traffic; the chunked row must keep per-tick prompt work bounded by the
-      chunk while staying greedy-token-identical to the unchunked run
+      traffic; the chunked row runs adaptive prefill: per-tick prompt work
+      must stay bounded by the chunk on every *contended* tick (a live slot
+      decoding), while staying greedy-token-identical to the unchunked run
   serve_shared_prefix — radix prefix cache on repeated prompts; a full hit
       must recompute 0 prompt steps
 
@@ -41,7 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.codegen import bind_cell_params, cell_stage_runner, compile_spec
+from repro.codegen import (bind_cell_params, cell_stage_runner, compile_spec,
+                           pallas_backend)
 from repro.configs import get_smoke_config
 from repro.core.synthesis import NetworkSpec
 from repro.models import lm
@@ -113,8 +115,13 @@ def _int8_bench(records: list, smoke: bool) -> None:
     us = jax.random.normal(jax.random.PRNGKey(3), (B, T, D))
     x0 = {"h": jnp.zeros((B, H)), "c": jnp.zeros((B, H))}
     for name, bits in (("gate_fp32", None), ("gate_int8", 8)):
-        run, _ = cell_stage_runner("lstm", D, H, quant_bits=bits)
-        us_call = time_call(run, consts, x0, us, warmup=1, iters=3)
+        run, graph = cell_stage_runner("lstm", D, H, quant_bits=bits)
+        # synthesis-time ROM packing: the int8 path times the *serving*
+        # configuration (pre-packed int8 pages + fused dequant), not the
+        # one-time per-channel quantization of the weights
+        call_consts = consts if bits is None else \
+            pallas_backend.prequantize_consts(graph, consts, bits)
+        us_call = time_call(run, call_consts, x0, us, warmup=1, iters=3)
         records.append({"bench": name,
                         "config": {"cell": "lstm", "d_in": D, "hidden": H,
                                    "batch": B, "seq_len": T,
@@ -141,32 +148,70 @@ def _serving_bench(records: list, smoke: bool) -> None:
                 for i, p in enumerate(shorts)]
         return out
 
-    outs = {}
-    for name, c in (("serve_mixed_unchunked", 0), ("serve_mixed_chunked", chunk)):
+    # the chunked row serves with the adaptive bound: the fixed chunk
+    # applies only on ticks where a live slot is decoding (the stall it
+    # exists to prevent); uncontended ticks take the same one-shot prefill
+    # path as the unchunked server, so chunking no longer taxes
+    # throughput/TTFT when nothing is decoding
+    rows = [("serve_mixed_unchunked", 0), ("serve_mixed_chunked", chunk)]
+    servers = {}
+    for name, c in rows:
         srv = DecodeServer(cfg, params, num_slots=2, max_seq=2 * long_len,
-                           prefill_chunk=c)
+                           prefill_chunk=c, prefill_adaptive=c > 0)
+        # warm window: each server jit-compiles its own prefill/decode fns
+        # (per-instance caches), so the timed windows measure dispatch
+        # structure, not first-touch XLA compiles
         for r in traffic():
+            r.uid += 5000
             srv.submit(r)
-        t0 = time.perf_counter()
-        done = srv.run_until_drained()
-        wall = time.perf_counter() - t0
-        outs[name] = {r.uid: list(r.out_tokens) for r in done}
-        toks = sum(len(r.out_tokens) for r in done)
-        stats = srv.stats()
+        srv.run_until_drained()
+        srv.stats(reset=True)
+        servers[name] = srv
+    # best-of-3 timed windows, INTERLEAVED across the two servers so slow
+    # host drift hits both rows alike: wall/TTFT come from each server's
+    # fastest window; the STRUCTURAL keys (tick bound, token identity)
+    # must hold on EVERY window
+    outs = {}
+    windows = {name: [] for name, _ in rows}
+    for w in range(3):
+        off = w * 200
+        for name, c in rows:
+            srv = servers[name]
+            for r in traffic():
+                r.uid += off
+                srv.submit(r)
+            t0 = time.perf_counter()
+            srv.run_until_drained()
+            wall = time.perf_counter() - t0
+            done = [r for r in srv.completed if off <= r.uid < off + 200]
+            win_out = {r.uid - off: list(r.out_tokens) for r in done}
+            toks = sum(len(t) for t in win_out.values())
+            stats = srv.stats(reset=True)
+            bound_ok = c == 0 \
+                or stats["prefill"]["max_prompt_steps_contended_tick"] <= c
+            if w == 0:
+                outs[name] = win_out
+            elif win_out != outs[name]:
+                bound_ok = False    # windows must be token-identical too
+            windows[name].append((wall, toks, stats, bound_ok))
+    for name, c in rows:
+        wall, toks, stats, _ = min(windows[name], key=lambda win: win[0])
+        bound_ok = all(b for _, _, _, b in windows[name])
         # TTFT comes from the server's own latency histogram — the same
         # registry the trace spans and metrics exports read, so the bench
         # artifact can never disagree with the serving telemetry.
         rec = {"bench": name,
                "config": {"arch": cfg.name, "slots": 2, "long_len": long_len,
                           "shorts": len(shorts), "prefill_chunk": c,
-                          "max_new": max_new},
+                          "prefill_adaptive": c > 0, "max_new": max_new},
                "tokens_per_s": toks / wall,
                "syncs_per_token": stats["syncs_per_token"],
                "ttft_p95_ms": float(stats["latency"]["ttft_ms"]["p95"]),
                "max_prompt_steps_per_tick":
                    stats["prefill"]["max_prompt_steps_per_tick"],
-               "tick_bound_ok": c == 0
-                   or stats["prefill"]["max_prompt_steps_per_tick"] <= c}
+               "max_prompt_steps_contended_tick":
+                   stats["prefill"]["max_prompt_steps_contended_tick"],
+               "tick_bound_ok": bound_ok}
         records.append(rec)
         emit(name, wall / max(toks, 1) * 1e6,
              f"max_steps/tick={rec['max_prompt_steps_per_tick']}")

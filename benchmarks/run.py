@@ -19,6 +19,10 @@ Suites bundle benches into a single JSON artifact:
   --suite perf [--smoke] — decode sync structure (per-token vs persistent
   K-step), C-slow fused-vs-vmap, int8-vs-fp32 gate path →
   ``benchmarks/BENCH_perf.json`` (the CI perf-trajectory artifact).
+
+  --suite tune [--smoke] — the Fig. 10 auto-tuner loop on the paper's case
+  studies → ``benchmarks/BENCH_tune.json`` (repro.tune/v1 Pareto reports,
+  validated in CI by ``python -m repro.obs.check``).
 """
 
 from __future__ import annotations
@@ -31,7 +35,7 @@ def main() -> None:
     ap.add_argument("--only", nargs="*", default=None,
                     help="subset: fig11 fig10 table1 fig3 fig5 lstm codegen "
                          "kernels int8 roofline perf")
-    ap.add_argument("--suite", choices=["perf"], default=None,
+    ap.add_argument("--suite", choices=["perf", "tune"], default=None,
                     help="run one aggregated suite instead of the figure benches")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes (CI-sized artifact in seconds)")
@@ -43,11 +47,15 @@ def main() -> None:
 
     from . import (codegen_bench, fig3_jstep, fig5_cslow, fig10_generator,
                    fig11_snr, int8_serving, kernels_bench, lstm_throughput,
-                   perf_suite, roofline, table1_api)
+                   perf_suite, roofline, table1_api, tune_suite)
 
     if args.suite == "perf":
         print("name,us_per_call,derived")
         perf_suite.run(args.out, smoke=args.smoke, check_baseline=args.check)
+        return
+    if args.suite == "tune":
+        print("name,us_per_call,derived")
+        tune_suite.run(args.out, smoke=args.smoke)
         return
 
     benches = {

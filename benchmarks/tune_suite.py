@@ -1,0 +1,72 @@
+"""Auto-tuner suite: one Fig. 10 loop per case-study spec → BENCH_tune.json.
+
+Runs ``repro.tune`` end-to-end (enumerate → predict → measure → difftest
+gate → Pareto) on the two case studies the paper's results section uses:
+
+  tune_mlp_case_study — the shallow-network case study (§V): a 4-hidden-
+      layer MLP, 3 inputs / 4 nodes per layer / 2 outputs
+  tune_lstm_h4        — the deep-network case study: a hidden-size-4 LSTM
+      over a short sequence
+
+and writes a ``repro.tune/v1`` wrapper document (one run per spec) to
+``benchmarks/BENCH_tune.json`` plus a copy under ``experiments/`` — the CI
+tune-smoke step validates the artifact with ``python -m repro.obs.check``.
+
+Pass criteria captured in each run: the winner is difftest-validated and
+its measured objective beats the default configuration (unroll=1, c_slow=1)
+— ``speedup >= 1`` — on the same host.
+
+``--smoke`` shrinks the search grid and the measure budget so the suite
+finishes in CI-runner seconds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.synthesis import NetworkSpec
+
+from .common import emit
+
+OUT_JSON = os.path.join(os.path.dirname(__file__), "BENCH_tune.json")
+
+SMOKE_SPACE = {"unroll": (1, 2), "c_slow": (1, 2), "quant_bits": (None, 8),
+               "double_buffer": (True,)}
+
+
+def _case_studies(smoke: bool) -> list[tuple[str, NetworkSpec]]:
+    return [
+        ("tune_mlp_case_study", NetworkSpec(3, 4, 4, 2)),
+        ("tune_lstm_h4", NetworkSpec(2, 1, 4, 2, cell="lstm",
+                                     seq_len=4 if smoke else 6)),
+    ]
+
+
+def run(out_dir: str = "experiments", smoke: bool = False) -> dict:
+    from repro.tune import result_doc, tune
+
+    os.makedirs(out_dir, exist_ok=True)
+    space_kwargs = SMOKE_SPACE if smoke else None
+    budget = 3 if smoke else 6
+    runs = []
+    for name, spec in _case_studies(smoke):
+        result = tune(spec, optimize="latency", budget=budget, batch=2,
+                      space_kwargs=space_kwargs)
+        doc = result_doc(result)
+        doc["bench"] = name
+        runs.append(doc)
+        best = result.best
+        emit(name, (best.measured or {}).get("wall_us", 0.0),
+             f"best={best.key} validated={best.validated} "
+             f"speedup={result.speedup and f'{result.speedup:.2f}x' or 'n/a'} "
+             f"front={len(result.pareto)}")
+        print(result.table())
+    payload = {"schema": "repro.tune/v1", "suite": "tune", "smoke": smoke,
+               "runs": runs}
+    with open(OUT_JSON, "w") as fh:
+        json.dump(payload, fh, indent=1, default=str)
+    with open(os.path.join(out_dir, "BENCH_tune.json"), "w") as fh:
+        json.dump(payload, fh, indent=1, default=str)
+    emit("tune_suite", 0.0, f"json={os.path.basename(OUT_JSON)}")
+    return payload

@@ -28,7 +28,7 @@ from .builders import (
 )
 from .ir import DatapathGraph, GraphBuilder, Node, Program, Schedule, Stage, eval_graph
 from .verilog import ResourceReport, emit_program, report_program
-from . import pallas_backend, rtlsim, verilog, xla_backend
+from . import knobs, pallas_backend, rtlsim, verilog, xla_backend
 
 BACKENDS = ("xla", "pallas", "verilog")
 
@@ -66,6 +66,7 @@ __all__ = [
     "compile_spec",
     "emit_program",
     "eval_graph",
+    "knobs",
     "pallas_backend",
     "register_cell",
     "registered_cells",

@@ -1,0 +1,118 @@
+"""Per-backend knob metadata for the design-space tuner (paper Fig. 10).
+
+The synthesis knobs — unroll ``j``, C-slow factor, fixed-point word width,
+double-buffered ROM prefetch, and the Pallas tiling block params — are not
+uniformly valid: XLA has no fixed-point path for recurrent cells, the ssm
+cell has no activation units so the Pallas LUT mode needs the int8 MACC
+(``bits <= 8``), the rtlsim word width is clamped to ``[MIN_WIDTH, 32]``,
+and ``double_buffer``/``chunk``/``block_b`` only exist on the Pallas
+backend.  This module is the single source of those rules so the tuner can
+reject invalid combinations *at enumeration* instead of mid-search, and so
+the rules provably mirror :func:`repro.core.synthesis._quant_analysis`
+(``tests/test_tune.py`` cross-checks them against ``synthesize``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+# Default search grid per knob — deliberately small: the predict pass is
+# cheap but the measure pass compiles, so the default space stays a few
+# dozen candidates wide.  Callers override any axis.
+DEFAULT_UNROLL = (1, 2, 4)
+DEFAULT_C_SLOW = (1, 2, 4)
+DEFAULT_QUANT_BITS = (None, 8)
+DEFAULT_DOUBLE_BUFFER = (True, False)
+DEFAULT_CHUNK = (None,)
+DEFAULT_BLOCK_B = (None,)
+
+# Knobs that only change the compiled artifact on the Pallas backend; on
+# other backends they are normalized to their defaults (matching
+# ``synthesis._cache_key``) so enumeration never emits aliased candidates.
+PALLAS_ONLY_KNOBS = ("double_buffer", "chunk", "block_b")
+
+
+@functools.lru_cache(maxsize=None)
+def _cell_has_af(cell: str) -> bool:
+    """Does the cell's datapath contain activation-function units?  (The
+    Pallas LUT quantization mode only exists when there is an AF to ROM.)"""
+    if cell == "mlp":
+        return True
+    from .builders import CELL_GRAPHS
+
+    return bool(CELL_GRAPHS[cell](2, 2).af_nodes())
+
+
+def quant_reason(backend: str, cell: str, bits: int | None) -> str | None:
+    """Why ``quant_bits=bits`` is invalid for (backend, cell) — or None if
+    it is valid.  Mirrors ``synthesis._quant_analysis`` exactly."""
+    if bits is None:
+        return None
+    if not 8 <= bits <= 32:
+        # every tuner candidate must be difftest-validatable, and the bit
+        # path (rtlsim vs golden model) only exists for widths in [8, 32]
+        return (f"quant_bits={bits} outside rtlsim's verifiable word range "
+                "[8, 32]")
+    if cell == "mlp":
+        return None  # fixed-point SNR analysis runs on every backend
+    if backend == "xla":
+        return (f"quant_bits={bits} with cell='{cell}' has no XLA path "
+                "(no LUT gates / int8 MACC on the scan backend)")
+    if backend == "verilog":
+        return None  # quant_bits is the RTL word width
+    if backend == "pallas":
+        if _cell_has_af(cell) or bits <= 8:
+            return None
+        return (f"quant_bits={bits} on af-free cell '{cell}' has nothing to "
+                "quantize on pallas (no AF ROM; int8 MACC needs bits <= 8)")
+    return f"unknown backend '{backend}'"
+
+
+def knob_reason(backend: str, cell: str, *, unroll: int = 1, c_slow: int = 1,
+                quant_bits: int | None = None, double_buffer: bool = True,
+                chunk: int | None = None,
+                block_b: int | None = None) -> str | None:
+    """Full-candidate validity check: first reason the combination cannot be
+    synthesized, or None when it can."""
+    if unroll < 1:
+        return f"unroll={unroll} must be >= 1"
+    if c_slow < 1:
+        return f"c_slow={c_slow} must be >= 1"
+    reason = quant_reason(backend, cell, quant_bits)
+    if reason is not None:
+        return reason
+    if backend != "pallas":
+        if not double_buffer:
+            return f"double_buffer=False only exists on pallas (got {backend})"
+        if chunk is not None or block_b is not None:
+            return f"chunk/block_b only exist on pallas (got {backend})"
+    else:
+        if chunk is not None and chunk < 1:
+            return f"chunk={chunk} must be >= 1"
+        if block_b is not None and block_b < 1:
+            return f"block_b={block_b} must be >= 1"
+    return None
+
+
+def normalize_pallas_knobs(backend: str, double_buffer: bool,
+                           chunk: int | None, block_b: int | None):
+    """Collapse pallas-only knobs to their defaults on other backends —
+    the same normalization ``synthesis._cache_key`` applies, exposed here so
+    space enumeration dedups aliases instead of measuring them twice."""
+    if backend != "pallas":
+        return True, None, None
+    return double_buffer, chunk, block_b
+
+
+__all__ = [
+    "DEFAULT_BLOCK_B",
+    "DEFAULT_C_SLOW",
+    "DEFAULT_CHUNK",
+    "DEFAULT_DOUBLE_BUFFER",
+    "DEFAULT_QUANT_BITS",
+    "DEFAULT_UNROLL",
+    "PALLAS_ONLY_KNOBS",
+    "knob_reason",
+    "normalize_pallas_knobs",
+    "quant_reason",
+]

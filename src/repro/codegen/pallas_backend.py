@@ -26,9 +26,15 @@ Quantized paths (paper §IV-B):
     ``kernels/_lut`` (one-hot × table MXU contractions with linear
     interpolation; σ(x) = (1 + tanh(x/2))/2 reuses the same table).
   * ``quant_bits <= 8`` switches every 2-D weight ROM feeding a macc node to
-    the ``kernels/int8_matmul`` datapath: int8 weights with per-channel
-    scales, dynamic per-row int8 activations, int32 MACC, one rescale —
-    the paper's fixed-point DSP datapath, composing with the LUT gates.
+    weight-only int8: the ROM pages are packed ONCE (at synthesis time via
+    :func:`prequantize_consts`, or on the first traced call) to int8 codes
+    plus a per-output-channel scale, ship through the double-buffer DMA at
+    1/4 the bytes, and the dequant is fused into the Q-align select after
+    the dot (``(x @ w_q) * scale`` — exact, because the scale is
+    per-output-channel) — the paper's fixed-point coefficient ROM, composing
+    with the LUT gates.  Activations stay f32: the earlier dynamic per-row
+    activation quantization re-quantized every step and pushed the MACC
+    onto an int32 dot with no fast path, which made int8 *slower* than f32.
 """
 
 from __future__ import annotations
@@ -45,9 +51,9 @@ from repro import obs as obs_lib
 from repro.core.state_space import ACTIVATIONS
 from repro.kernels._compat import CompilerParams
 from repro.kernels._lut import lut_interpolate, shifted_table
-from repro.kernels.int8_matmul.ops import quantize_per_channel, quantize_rows
+from repro.kernels.int8_matmul.ops import quantize_per_channel
 
-from .ir import Program, Stage, eval_graph
+from .ir import DatapathGraph, Program, Stage, eval_graph
 
 PyTree = Any
 
@@ -79,17 +85,32 @@ def _act_resolver(lut_refs, n_lut: int) -> Callable:
     return act
 
 
-def _int8_mm(x, w, s_w):
-    """The fixed-point MACC: dynamic per-row int8 activations × per-channel
-    int8 weights, int32 accumulate, one rescale — ``kernels/int8_matmul``'s
-    datapath inlined into the generated kernel (casts to int32 before the
-    dot so Mosaic maps s8×s8→s32 onto the MXU)."""
-    x_q, s_x = quantize_rows(x)
-    z = jax.lax.dot_general(
-        x_q.astype(jnp.int32), w.astype(jnp.int32),
-        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32,
-    )
-    return z.astype(jnp.float32) * s_x * s_w
+def prequantize_consts(graph: DatapathGraph, consts: dict,
+                       quant_bits: int | None) -> dict:
+    """Pack every quantizable weight ROM to int8 ONCE, at synthesis time.
+
+    Returns a new consts dict where each ``graph.quantizable_weights()``
+    entry is replaced by its int8 codes and a ``"<name>.scale"`` companion
+    carries the per-output-channel scale (``quantize_per_channel`` keepdims
+    layout; for per-step ROM stacks the leading T axis is preserved, one
+    scale bank per page).  ``compile_stage``'s ``run()`` recognizes packed
+    consts by the ``.scale`` companion and streams the int8 pages as-is —
+    no per-call quantization work, and the double-buffer DMA moves 1/4 the
+    bytes.  Unpacked float consts keep working (they are quantized inside
+    the trace, once per jit cache entry), so callers that re-bind trained
+    weights every call lose nothing.
+    """
+    if quant_bits is None or quant_bits > 8:
+        return consts
+    out = dict(consts)
+    for name in graph.quantizable_weights():
+        if name not in out or f"{name}.scale" in out:
+            continue  # absent (bound later) or already packed
+        w_q, s = quantize_per_channel(
+            jnp.asarray(out[name], jnp.float32), axis=-2)
+        out[name] = w_q
+        out[f"{name}.scale"] = s
+    return out
 
 
 def _pad_to(arr, size: int, axis: int):
@@ -212,7 +233,14 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
 
         act = _act_resolver(lut_refs, n_lut)
         shared_vals = {name: sh_refs[name][...] for name in shared_names}
-        sh_scale_vals = {name: sh_scale[name][...] for name in sh_q}
+        for name in sh_q:
+            # hoist the WHOLE dequant out of the step loop: a shared weight
+            # ROM stays int8-resident in VMEM but is cast+rescaled once per
+            # grid cell ((x @ w_q)·s ≡ x @ (w_q·s), per-output-channel s),
+            # so the per-step MACC is the same plain f32 dot as the fp32
+            # path — only per-step DMA'd pages pay a fused post-dot rescale
+            shared_vals[name] = shared_vals[name].astype(jnp.float32) \
+                * sh_scale[name][...]
         states = {name: scr[name][...] for name in state_names}
 
         ys = []
@@ -225,11 +253,15 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
                 return shared_vals[name]
 
             def mm(x, w_name, w, t=t):
-                if w_name not in qnames:
-                    return x @ w
-                s_w = page(f"{w_name}.scale", t) if w_name in ps_q \
-                    else sh_scale_vals[w_name]
-                return _int8_mm(x, w, s_w)
+                if w_name not in ps_q:
+                    return x @ w    # fp32, or shared int8 dequanted above
+                # weight-only int8 page: f32 activations × int8 codes,
+                # dequant fused into the Q-align select AFTER the dot —
+                # exact because the scale is per-output-channel ([1, N]
+                # broadcast over the [B, N] product).  The page arrived
+                # int8 from the DMA (1/4 the bytes) and casts here.
+                s_w = page(f"{w_name}.scale", t)
+                return (x @ w.astype(jnp.float32)) * s_w
 
             new_states, y = eval_graph(graph, consts=consts_get, states=states,
                                        u=u_t, act=act, mm=mm)
@@ -281,19 +313,32 @@ def compile_stage(stage: Stage, *, lut=None, chunk: int = DEFAULT_CHUNK,
                     (ct,) + tail, lambda i, c, nd=len(tail): (c,) + (0,) * nd))
             operands.append(arr)
 
+        def packed(name):
+            """int8 codes + scale for a quantizable ROM: pre-packed consts
+            (``prequantize_consts`` synthesis-time packing, recognized by
+            the ``.scale`` companion) pass through untouched; raw float
+            consts are quantized here, inside the trace."""
+            if f"{name}.scale" in consts:
+                return (jnp.asarray(consts[name]),
+                        jnp.asarray(consts[f"{name}.scale"], jnp.float32))
+            return quantize_per_channel(
+                jnp.asarray(consts[name], jnp.float32), axis=-2)
+
         ps_scales = {}
         for name in per_step:
-            arr = jnp.asarray(consts[name], jnp.float32)  # [T, ...]
-            if name in qnames:
-                arr, ps_scales[name] = quantize_per_channel(arr, axis=-2)
+            if name in qnames:  # [T, ...] int8 pages: 1/4 the DMA bytes
+                arr, ps_scales[name] = packed(name)
+            else:
+                arr = jnp.asarray(consts[name], jnp.float32)
             add_stream(_pad_to(arr, Tp, 0))
         for name in ps_q:
             add_stream(_pad_to(ps_scales[name], Tp, 0))
         sh_scales = {}
         for name in shared_names:
-            arr = jnp.asarray(consts[name], jnp.float32)
             if name in qnames:
-                arr, sh_scales[name] = quantize_per_channel(arr, axis=-2)
+                arr, sh_scales[name] = packed(name)
+            else:
+                arr = jnp.asarray(consts[name], jnp.float32)
             in_specs.append(pl.BlockSpec(
                 arr.shape, lambda i, c, nd=arr.ndim: (0,) * nd))
             operands.append(arr)
@@ -368,7 +413,8 @@ def compile_program(program: Program, *, lut=None,
     the C-slow interleave — ONE fused kernel launch carries all C·B streams
     through the one datapath, instead of ``cslow_vectorized``'s
     vmap-of-scans.  ``quant_bits <= 8`` runs every gate contraction on the
-    int8 MACC path (see :func:`compile_stage`).
+    weight-only int8 ROM path (see :func:`compile_stage` /
+    :func:`prequantize_consts`).
     """
     from repro.core.cslow import fold_streams, unfold_streams
 

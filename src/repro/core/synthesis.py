@@ -217,19 +217,21 @@ _SYNTH_CACHE: dict[tuple, SynthesisReport] = {}
 
 
 def _cache_key(spec: NetworkSpec, batch: int | None, backend: str,
-               double_buffer: bool) -> tuple:
+               double_buffer: bool, chunk: int | None = None,
+               block_b: int | None = None) -> tuple:
     """EVERY knob that changes the compiled artifact must appear here.
 
     ``spec`` is a frozen dataclass, so its hash covers the shape knobs AND
     ``quant_bits`` (which derives the pallas lut/int8-MACC modes — the
     ``int8_macc`` flag is ``backend=="pallas" and quant_bits<=8``, a pure
-    function of key fields, so it cannot alias).  ``double_buffer`` only
-    exists on the pallas backend; normalize it for the others so an
-    xla/verilog call can't fork the cache on an irrelevant flag.
+    function of key fields, so it cannot alias).  ``double_buffer`` /
+    ``chunk`` / ``block_b`` only exist on the pallas backend; normalize
+    them for the others so an xla/verilog call can't fork the cache on an
+    irrelevant flag.
     """
     if backend != "pallas":
-        double_buffer = True
-    return (spec, batch, backend, double_buffer)
+        double_buffer, chunk, block_b = True, None, None
+    return (spec, batch, backend, double_buffer, chunk, block_b)
 
 
 def synthesize_cache_clear() -> None:
@@ -282,14 +284,24 @@ def _quant_analysis(spec: NetworkSpec, backend: str, prog) -> dict | None:
     )
 
 
-def _ledger_key(spec: NetworkSpec, batch: int | None, backend: str) -> str:
+def _ledger_key(spec: NetworkSpec, batch: int | None, backend: str,
+                double_buffer: bool = True, chunk: int | None = None,
+                block_b: int | None = None) -> str:
     """Program id in the predicted-vs-measured ledger: one row per distinct
-    compiled artifact the Fig. 10 loop could rank."""
+    compiled artifact the Fig. 10 loop could rank.  Non-default pallas
+    tiling knobs get their own tags so tuner candidates never collide."""
     key = f"{spec.name}|{backend}|u{spec.unroll}|c{spec.c_slow}"
     if spec.quant_bits is not None:
         key += f"|q{spec.quant_bits}"
     if batch:
         key += f"|b{batch}"
+    if backend == "pallas":
+        if not double_buffer:
+            key += "|db0"
+        if chunk is not None:
+            key += f"|ch{chunk}"
+        if block_b is not None:
+            key += f"|bb{block_b}"
     return key
 
 
@@ -345,7 +357,11 @@ def _measure_compiled(compiled, params, u_shape, key: str) -> None:
 def synthesize(spec: NetworkSpec, batch: int | None = None,
                backend: str = "xla", *,
                double_buffer: bool = True,
-               measure: bool = True) -> SynthesisReport:
+               chunk: int | None = None,
+               block_b: int | None = None,
+               measure: bool = True,
+               optimize: str | None = None,
+               budget: int | None = None):
     """spec → IR program → {XLA scan, fused Pallas kernel, Verilog RTL}.
 
     All backends consume the same :mod:`repro.codegen` program, so
@@ -353,7 +369,16 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     ``backend="verilog"`` additionally attaches the Table-I RTL text plus a
     resource report cross-checked against ``compiled.cost_analysis()``.
     ``double_buffer`` forwards to the pallas backend (2-slot ROM prefetch
-    vs BlockSpec streaming).  Results are memoized by :func:`_cache_key`.
+    vs BlockSpec streaming); ``chunk`` / ``block_b`` override its tiling
+    block params.  Results are memoized by :func:`_cache_key`.
+
+    ``optimize="latency" | "throughput" | "resources"`` runs the paper's
+    Fig. 10 optimization loop instead of one fixed synthesis: the
+    :mod:`repro.tune` auto-tuner searches the knob space around ``spec``
+    (unroll × c_slow × quant_bits × double_buffer × backend × tiling),
+    measures the top-``budget`` predicted candidates, difftest-validates
+    the winner, and returns a :class:`repro.tune.TuneResult` whose
+    ``.report`` is the winning configuration's SynthesisReport.
 
     Every first-time synthesis feeds the process observability scope
     (:data:`repro.obs.OBS`): compile/cache-hit spans and counters, plus a
@@ -363,11 +388,16 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     """
     from repro import codegen
 
+    if optimize is not None:
+        from repro.tune import tune
+
+        return tune(spec, optimize=optimize, budget=budget, batch=batch)
+
     O = obs_lib.OBS
     if backend not in codegen.BACKENDS:
         raise ValueError(
             f"unknown backend '{backend}'; available: {codegen.BACKENDS}")
-    key = _cache_key(spec, batch, backend, double_buffer)
+    key = _cache_key(spec, batch, backend, double_buffer, chunk, block_b)
     if key in _SYNTH_CACHE:
         O.metrics.counter("synth_cache", "synthesize() memo", result="hit").inc()
         return dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
@@ -383,14 +413,26 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
         from repro.kernels.tanh_lut.ref import make_lut
 
         lut = make_lut(min(max(spec.quant_bits // 2, 6), 10))
+    params = program.params
     if backend == "pallas":
         int8_bits = spec.quant_bits if quant and quant.get("int8_macc") else None
-        fwd = codegen.pallas_backend.compile_program(
+        pb = codegen.pallas_backend
+        fwd = pb.compile_program(
             program, lut=lut, quant_bits=int8_bits,
-            double_buffer=double_buffer)
+            double_buffer=double_buffer,
+            chunk=chunk if chunk is not None else pb.DEFAULT_CHUNK,
+            block_b=block_b if block_b is not None else pb.DEFAULT_BLOCK_B)
+        if int8_bits is not None:
+            # pack the int8 weight ROM pages ONCE, here at synthesis time —
+            # the kernel then streams 1/4-size pages through the double
+            # buffer with the dequant fused after the dot, instead of
+            # re-quantizing inside every traced call
+            params = dict(params)
+            params["stages"] = [
+                pb.prequantize_consts(st.graph, sp, int8_bits)
+                for st, sp in zip(program.stages, params["stages"])]
     else:  # "xla" and the verilog cross-check both compile the XLA program
         fwd = codegen.xla_backend.compile_program(program)
-    params = program.params
 
     u_shape = (spec.num_inputs,) if spec.cell == "mlp" \
         else (spec.seq_len, spec.num_inputs)
@@ -402,7 +444,7 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
         _analyze_compiled(fwd, params, u)
 
     # predicted-vs-measured ledger: the Fig. 10 loop's instrumentation
-    lkey = _ledger_key(spec, batch, backend)
+    lkey = _ledger_key(spec, batch, backend, double_buffer, chunk, block_b)
     O.ledger.predict(
         lkey,
         fsm_cycles=codegen.rtlsim.fsm_cycle_estimate(program),

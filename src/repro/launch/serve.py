@@ -31,6 +31,10 @@ def main() -> None:
     ap.add_argument("--block-k", type=int, default=8)
     ap.add_argument("--prefill-chunk", type=int, default=0,
                     help="chunked prefill: N prompt tokens per tick (0 = off)")
+    ap.add_argument("--prefill-adaptive", action="store_true",
+                    help="drain whole prefill jobs on ticks with no live "
+                         "decode slot (chunk bound applies only under "
+                         "contention)")
     ap.add_argument("--prefix-cache", type=int, default=0, metavar="MB",
                     help="radix prefix-cache byte budget in MB (0 = off)")
     ap.add_argument("--scheduler", choices=["priority", "fifo"],
@@ -58,6 +62,7 @@ def main() -> None:
     server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
                           block_k=args.block_k, persistent=args.persistent,
                           prefill_chunk=args.prefill_chunk,
+                          prefill_adaptive=args.prefill_adaptive,
                           prefix_cache_bytes=args.prefix_cache << 20,
                           scheduler=SchedulerConfig(policy=args.scheduler),
                           obs=obs)

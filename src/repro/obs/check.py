@@ -8,7 +8,8 @@ build instead of silently producing a Perfetto file that won't load.
     python -m repro.obs.check trace.json metrics.json
 
 Files are dispatched on content: a top-level ``traceEvents`` key is checked
-as a Chrome trace, anything else as a metrics document.
+as a Chrome trace, a ``repro.tune`` schema (or ``suite: tune``) as an
+auto-tuner Pareto report, anything else as a metrics document.
 """
 
 from __future__ import annotations
@@ -99,6 +100,89 @@ def check_metrics_doc(doc) -> list[str]:
     return errs
 
 
+def check_tune_doc(doc) -> list[str]:
+    """Validate a ``repro.tune/v1`` Pareto report (the auto-tuner's JSON
+    artifact): every candidate carries knobs + predicted scores, measured /
+    pareto reference known candidate keys, and the winner is reproducible
+    (spec + synthesize kwargs + cache key)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["tune: top level must be an object"]
+    if doc.get("schema") != "repro.tune/v1":
+        errs.append(f"tune: unknown schema {doc.get('schema')!r}")
+    if doc.get("suite") != "tune":
+        errs.append("tune: 'suite' must be 'tune'")
+    if "runs" in doc:  # BENCH_tune.json wrapper: one tune run per spec
+        runs = doc["runs"]
+        if not isinstance(runs, list) or not runs:
+            return errs + ["tune: 'runs' must be a non-empty list"]
+        for i, run in enumerate(runs):
+            errs.extend(f"runs[{i}]: {e}" for e in check_tune_doc(run))
+        return errs
+    for key in ("spec", "spec_name", "objective"):
+        if key not in doc:
+            errs.append(f"tune: missing '{key}'")
+    if doc.get("objective") not in ("latency", "throughput", "resources",
+                                    None):
+        errs.append(f"tune: unknown objective {doc.get('objective')!r}")
+    cands = doc.get("candidates")
+    keys: set[str] = set()
+    if not isinstance(cands, list) or not cands:
+        errs.append("tune: 'candidates' must be a non-empty list")
+    else:
+        for i, c in enumerate(cands):
+            where = f"tune: candidates[{i}]"
+            if not isinstance(c, dict):
+                errs.append(f"{where} is not an object")
+                continue
+            if not isinstance(c.get("key"), str) or not c["key"]:
+                errs.append(f"{where} needs a string 'key'")
+            else:
+                keys.add(c["key"])
+            if not isinstance(c.get("knobs"), dict):
+                errs.append(f"{where} needs a 'knobs' object")
+            pred = c.get("predicted")
+            if not isinstance(pred, dict):
+                errs.append(f"{where} needs a 'predicted' object")
+            else:
+                for pk in ("fsm_cycles", "scores"):
+                    if pk not in pred:
+                        errs.append(f"{where}.predicted missing '{pk}'")
+            if c.get("measured") is not None \
+                    and not isinstance(c["measured"], dict):
+                errs.append(f"{where}.measured must be an object or null")
+    for section in ("measured", "pareto"):
+        refs = doc.get(section)
+        if not isinstance(refs, list):
+            errs.append(f"tune: '{section}' must be a list of candidate keys")
+            continue
+        for k in refs:
+            if k not in keys:
+                errs.append(f"tune: {section} key {k!r} not in candidates")
+    best = doc.get("best")
+    if not isinstance(best, dict):
+        errs.append("tune: missing 'best' object")
+    else:
+        if best.get("key") not in keys:
+            errs.append(f"tune: best key {best.get('key')!r} not in candidates")
+        if not isinstance(best.get("measured_objective"), _NUM):
+            errs.append("tune: best.measured_objective not numeric")
+        repro = best.get("repro")
+        if not isinstance(repro, dict):
+            errs.append("tune: best missing 'repro' object")
+        else:
+            for key in ("spec", "synthesize_kwargs", "cache_key"):
+                if key not in repro:
+                    errs.append(f"tune: best.repro missing '{key}'")
+    baseline = doc.get("baseline")
+    if baseline is not None and not isinstance(baseline, dict):
+        errs.append("tune: 'baseline' must be an object or null")
+    if "speedup" in doc and doc["speedup"] is not None \
+            and not isinstance(doc["speedup"], _NUM):
+        errs.append("tune: 'speedup' not numeric")
+    return errs
+
+
 def check_file(path: str) -> list[str]:
     try:
         with open(path) as fh:
@@ -107,6 +191,10 @@ def check_file(path: str) -> list[str]:
         return [f"{path}: unreadable ({e})"]
     if isinstance(doc, dict) and "traceEvents" in doc:
         errs = check_trace_doc(doc)
+    elif isinstance(doc, dict) and (
+            str(doc.get("schema", "")).startswith("repro.tune")
+            or doc.get("suite") == "tune"):
+        errs = check_tune_doc(doc)
     else:
         errs = check_metrics_doc(doc)
     return [f"{path}: {e}" for e in errs]

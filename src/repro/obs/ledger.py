@@ -10,7 +10,8 @@ validate the ranking against *measured* runtime without re-running a whole
 benchmark suite.
 
 Keys are free-form program ids (``synthesize()`` uses
-``"<spec.name>|<backend>|u<unroll>|c<c_slow>[|q<bits>][|b<batch>]"``).
+``"<spec.name>|<backend>|u<unroll>|c<c_slow>[|q<bits>][|b<batch>]"`` plus
+``[|db0][|ch<chunk>][|bb<block_b>]`` for non-default pallas launch knobs).
 ``predict()`` and ``measure()`` may arrive in any order and accumulate;
 ``report()`` emits the join with derived columns:
 
@@ -68,11 +69,15 @@ class Ledger:
         with self._lock:
             self._rows.clear()
 
-    def report(self) -> list[dict]:
-        """Joined rows, one per program, with derived columns."""
+    def report(self, match: str | None = None) -> list[dict]:
+        """Joined rows, one per program, with derived columns.  ``match``
+        filters to keys containing the substring (program-key filter for
+        the tuner's measure pass and the report CLI)."""
         out = []
         with self._lock:
             items = sorted(self._rows.items())
+        if match is not None:
+            items = [(k, v) for k, v in items if match in k]
         for key, row in items:
             p, m = row["predicted"], row["measured"]
             rec = {"program": key,
@@ -98,9 +103,9 @@ class Ledger:
     def to_json(self, indent: int | None = None) -> str:
         return json.dumps(self.report(), indent=indent)
 
-    def format_table(self) -> str:
+    def format_table(self, match: str | None = None) -> str:
         """Human-readable predicted-vs-measured table (README format)."""
-        rows = self.report()
+        rows = self.report(match)
         if not rows:
             return "(ledger empty — nothing synthesized/measured yet)"
         hdr = f"{'program':<44} {'fsm_cycles':>10} {'flops':>12} " \

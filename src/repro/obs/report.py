@@ -6,6 +6,7 @@ predicted, wall-clock measured through the span layer), then prints the
 joined table and optionally writes it as JSON.
 
     python -m repro.obs.report [--backends xla pallas] [--out ledger.json]
+    python -m repro.obs.report --format json --program "gru_"
 """
 
 from __future__ import annotations
@@ -21,6 +22,11 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--seq-len", type=int, default=8)
     ap.add_argument("--quant-bits", type=int, default=0,
                     help="also sweep this fixed-point width (0 = fp only)")
+    ap.add_argument("--format", default="table", choices=["table", "json"],
+                    help="stdout format (json prints the joined rows)")
+    ap.add_argument("--program", default=None, metavar="SUBSTR",
+                    help="only report ledger keys containing this substring "
+                         "(e.g. a spec name or '|pallas|')")
     ap.add_argument("--out", default="",
                     help="write the joined ledger rows to this JSON file")
     args = ap.parse_args(argv)
@@ -41,8 +47,11 @@ def main(argv: list[str] | None = None) -> int:
                     synthesize(spec, batch=2, backend=backend)
                 except ValueError as e:  # e.g. unsupported quant × backend
                     log.debug(f"skip {spec.name}|{backend}: {e}")
-    rows = obs.OBS.ledger.report()
-    log.info(obs.OBS.ledger.format_table())
+    rows = obs.OBS.ledger.report(match=args.program)
+    if args.format == "json":
+        print(json.dumps(rows, indent=1))
+    else:
+        log.info(obs.OBS.ledger.format_table(match=args.program))
     if args.out:
         with open(args.out, "w") as fh:
             json.dump(rows, fh, indent=1)

@@ -149,6 +149,7 @@ class DecodeServer:
                  prefix_cache_bytes: int = 0,
                  scheduler: Scheduler | SchedulerConfig | None = None,
                  prefill_chunks_per_tick: int = 1,
+                 prefill_adaptive: bool = False,
                  obs: obs_lib.Observability | None = None):
         self.cfg, self.params = cfg, params
         self.B, self.S = num_slots, max_seq
@@ -157,6 +158,18 @@ class DecodeServer:
         self.persistent = persistent
         self.prefill_chunk = int(prefill_chunk)
         self.prefill_chunks_per_tick = max(1, int(prefill_chunks_per_tick))
+        # Adaptive chunk sizing: when NO slot is decoding, a fixed chunk
+        # buys nothing (there is no live stream to protect from head-of-line
+        # blocking) and costs a dispatch + host sync per chunk — so an
+        # uncontended tick drains pending prefill jobs whole, and the chunk
+        # bound re-engages the moment any slot is live.  Opt-in: the fixed
+        # bound stays the default contract (tests assert it).
+        self.prefill_adaptive = bool(prefill_adaptive)
+        if self.prefill_adaptive and self.prefill_chunk <= 0:
+            raise ValueError(
+                "prefill_adaptive=True requires prefill_chunk > 0 "
+                "(adaptive sizing adapts the chunked path; unchunked "
+                "prefill is already one-shot)")
         # Per-server observability scope: counters always on (they ARE the
         # stats() numbers), tracing opt-in (obs=Observability(trace=True)).
         self.obs = obs if obs is not None else obs_lib.Observability()
@@ -204,11 +217,16 @@ class DecodeServer:
         self._m_tick_max = m.gauge(
             "max_prompt_steps_per_tick",
             "high-watermark of per-tick prompt work (boundedness proof)")
+        self._m_tick_contended = m.gauge(
+            "max_prompt_steps_contended_tick",
+            "high-watermark of per-tick prompt work on ticks where a live "
+            "slot was decoding — the bound adaptive prefill must honor")
         self._m_live = m.gauge("live_slots", "slots decoding")
         self._h_ttft = m.histogram("ttft_ms", "submit -> first token")
         self._h_tpot = m.histogram("tpot_ms", "per-token decode latency")
         self._h_queue = m.histogram("queue_wait_ms", "submit -> dispatch")
         self._tick_prompt_steps = 0
+        self._tick_uncontended = True       # no slot is live before tick 0
 
     # registry-backed views of the pre-obs counter attributes ---------------
 
@@ -231,6 +249,10 @@ class DecodeServer:
     @property
     def max_prompt_steps_per_tick(self) -> int:
         return int(self._m_tick_max.value)
+
+    @property
+    def max_prompt_steps_contended_tick(self) -> int:
+        return int(self._m_tick_contended.value)
 
     # ------------------------------------------------------------------
     # admission
@@ -401,19 +423,29 @@ class DecodeServer:
                     entry = next((e for e in candidates if e.resumable), None)
 
             if self.prefill_chunk > 0:
-                caches = (self._inflate_entry(entry) if entry is not None
-                          else lm.init_cache(self.cfg, 1, self.S))
-                start = entry.length if entry is not None else 0
-                if self.prefix_cache is not None:
-                    if entry is not None:
-                        req.prefix_hit_tokens = start
-                        self.prefix_cache.record_hit(start, full=False)
-                    else:
-                        self.prefix_cache.record_miss()
-                self.reserved[b] = True
-                self._jobs.append(_PrefillJob(req=req, slot=b, caches=caches,
-                                              pos=start))
-                continue
+                # adaptive uncontended admission: with no live slot to stall
+                # and no resumable prefix state to splice, the chunk job
+                # machinery only adds work (resumable chunks scan against
+                # the full [1, S] cache buffer; one-shot prefill touches
+                # [1, plen]) — fall through to the one-shot path, which is
+                # dispatch-identical to an unchunked server
+                adaptive_oneshot = (self.prefill_adaptive and entry is None
+                                    and self._tick_uncontended
+                                    and not self._jobs)
+                if not adaptive_oneshot:
+                    caches = (self._inflate_entry(entry) if entry is not None
+                              else lm.init_cache(self.cfg, 1, self.S))
+                    start = entry.length if entry is not None else 0
+                    if self.prefix_cache is not None:
+                        if entry is not None:
+                            req.prefix_hit_tokens = start
+                            self.prefix_cache.record_hit(start, full=False)
+                        else:
+                            self.prefix_cache.record_miss()
+                    self.reserved[b] = True
+                    self._jobs.append(_PrefillJob(req=req, slot=b,
+                                                  caches=caches, pos=start))
+                    continue
 
             # legacy one-shot prefill
             if self.prefix_cache is not None:
@@ -437,14 +469,27 @@ class DecodeServer:
     def _advance_prefill(self) -> None:
         """Advance at most ``prefill_chunks_per_tick`` chunks, round-robin
         over in-flight jobs — the per-tick device work stays bounded by
-        chunks·chunk_size prompt tokens regardless of prompt length."""
-        for _ in range(self.prefill_chunks_per_tick):
+        chunks·chunk_size prompt tokens regardless of prompt length.
+
+        With ``prefill_adaptive``, an *uncontended* tick (no live decode
+        slot) instead drains every pending job whole: chunking exists to
+        bound the decode stall a long prompt inflicts on live streams, and
+        with nothing decoding the fixed chunk only multiplies dispatches
+        (the serve_mixed_chunked throughput + TTFT loss).  The per-chunk
+        greedy parity is unchanged — a full-length chunk is the same scan
+        as chained fixed chunks — and the moment any slot is live the
+        fixed bound re-engages."""
+        drain = (self.prefill_adaptive and self._jobs
+                 and self._tick_uncontended)
+        budget = len(self._jobs) if drain else self.prefill_chunks_per_tick
+        for _ in range(budget):
             if not self._jobs:
                 return
             self._job_rr %= len(self._jobs)
             job = self._jobs[self._job_rr]
             plen = len(job.req.prompt)
-            c = min(self.prefill_chunk, plen - job.pos)
+            c = plen - job.pos if drain \
+                else min(self.prefill_chunk, plen - job.pos)
             toks = jnp.asarray(
                 np.array(job.req.prompt[job.pos:job.pos + c], np.int32)[None])
             with self._tr.span("prefill_chunk", cat="prefill",
@@ -469,10 +514,17 @@ class DecodeServer:
 
     def _begin_tick(self) -> None:
         self._tick_prompt_steps = 0
+        # contention is a tick-level property, captured before admissions:
+        # a slot is "live" here iff it was decoding when the tick began —
+        # requests started later this tick never stalled on this tick's
+        # prefill work, so that work doesn't count against the chunk bound
+        self._tick_uncontended = not self.live.any()
         self._admit()
         self._advance_prefill()
         self._admit()   # full-hit admissions may free the tick for decode
         self._m_tick_max.set_max(self._tick_prompt_steps)
+        if not self._tick_uncontended:
+            self._m_tick_contended.set_max(self._tick_prompt_steps)
         self._m_live.set(int(self.live.sum()))
 
     # ------------------------------------------------------------------
@@ -658,7 +710,10 @@ class DecodeServer:
                 "prompt_steps_computed": self.prompt_steps_computed,
                 "chunks_run": self.prefill_chunks_run,
                 "chunk_size": self.prefill_chunk,
+                "adaptive": self.prefill_adaptive,
                 "max_prompt_steps_per_tick": self.max_prompt_steps_per_tick,
+                "max_prompt_steps_contended_tick":
+                    self.max_prompt_steps_contended_tick,
             },
             "latency": {
                 "ttft_ms": self._h_ttft.summary(),

@@ -1,0 +1,67 @@
+"""Auto-tuner CLI — one Fig. 10 loop from the command line.
+
+    python -m repro.tune --cell lstm --optimize latency --budget 8 \
+        --out experiments/tune_lstm.json
+
+``--smoke`` shrinks the search grid and budget so the full
+enumerate → predict → measure → validate → report pipeline runs in
+seconds on 2-CPU runners (the CI tune-smoke step).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.tune", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    ap.add_argument("--cell", default="lstm",
+                    choices=["mlp", "lstm", "gru", "ssm"])
+    ap.add_argument("--inputs", type=int, default=3)
+    ap.add_argument("--layers", type=int, default=1)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--outputs", type=int, default=2)
+    ap.add_argument("--seq-len", type=int, default=8,
+                    help="sequence steps (recurrent cells)")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--optimize", default="latency",
+                    choices=["latency", "throughput", "resources"])
+    ap.add_argument("--budget", type=int, default=None,
+                    help="max candidates compiled+timed (default 8)")
+    ap.add_argument("--backends", nargs="*", default=["xla", "pallas"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid + budget 3 (CI-sized, seconds)")
+    ap.add_argument("--out", default="",
+                    help="write the repro.tune/v1 Pareto report JSON here")
+    args = ap.parse_args(argv)
+
+    from repro.core.synthesis import NetworkSpec
+    from repro.obs import log
+
+    from . import tune, write_doc
+
+    spec = NetworkSpec(args.inputs, args.layers, args.nodes, args.outputs,
+                       cell=args.cell,
+                       seq_len=0 if args.cell == "mlp" else args.seq_len)
+    space_kwargs = None
+    budget = args.budget
+    if args.smoke:
+        space_kwargs = {"unroll": (1, 2), "c_slow": (1, 2),
+                        "quant_bits": (None, 8),
+                        "double_buffer": (True,)}
+        budget = budget or 3
+    result = tune(spec, optimize=args.optimize, budget=budget,
+                  batch=args.batch, backends=tuple(args.backends),
+                  space_kwargs=space_kwargs)
+    log.info(result.table())
+    if args.out:
+        write_doc(result, args.out)
+        log.info(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

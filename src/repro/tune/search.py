@@ -1,0 +1,288 @@
+"""Two-phase design-space search: predict (free) → measure (top-k) →
+difftest-validate (the paper's Fig. 10 loop, closed).
+
+* **predict** — every candidate is costed WITHOUT compiling anything:
+  ``build_program`` (pure IR assembly), rtlsim's FSM cycle model
+  (:func:`~repro.codegen.rtlsim.fsm_cycle_estimate`) and the IR resource
+  report (:func:`~repro.codegen.verilog.report_program`) give cycles,
+  MACC-lane/ROM/register area, and flops per inference.  Candidates are
+  ranked by the objective's predicted score; ties break on the ledger key,
+  so the ranking is deterministic.
+* **measure** — only the ``budget`` best-predicted candidates (plus the
+  ``unroll=1, c_slow=1`` baseline, always) go through ``synthesize()``:
+  compile + timed execution through the memo cache, with the wall-clock
+  landing in the process ledger (:data:`repro.obs.OBS`) next to the
+  prediction — the predicted-vs-measured delta is a first-class output.
+* **validate** — walking the measured ranking, the first candidate that
+  passes :func:`repro.verify.difftest.validate_candidate` (float paths
+  ≤ 1e-5, rtlsim bit-exact vs the golden model) is the winner; parity
+  failures are recorded on the candidate and skipped, so the tuner can
+  never return a configuration that breaks backend parity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+from repro import obs as obs_lib
+from repro.obs import log
+
+from .pareto import pareto_front
+from .space import Candidate, baseline_candidate, enumerate_space
+
+OBJECTIVES = ("latency", "throughput", "resources")
+DEFAULT_BUDGET = 8
+
+
+@dataclasses.dataclass
+class Scored:
+    """A candidate with its predict / measure / validate trajectory."""
+
+    cand: Candidate
+    predicted: dict                  # fsm_cycles, flops, score, resources…
+    measured: dict | None = None     # wall_us, objective, tokens
+    validated: bool | None = None    # None = never reached validation
+    parity_error: str | None = None
+
+    @property
+    def key(self) -> str:
+        return self.cand.key
+
+
+@dataclasses.dataclass
+class TuneResult:
+    spec: Any
+    objective: str
+    best: Scored                     # difftest-validated winner
+    baseline: Scored                 # unroll=1, c_slow=1 default synthesis
+    scored: list[Scored]             # full space, predict-ranked
+    measured: list[Scored]           # measure subset, measured-ranked
+    pareto: list[Scored]             # non-dominated (objective, resources)
+    report: Any = None               # winner's SynthesisReport
+    cache_key: tuple | None = None   # synthesis memo key of the winner
+
+    @property
+    def speedup(self) -> float | None:
+        """baseline measured objective / winner measured objective (>1 =
+        the tuner beat default synthesis)."""
+        b = (self.baseline.measured or {}).get("objective")
+        w = (self.best.measured or {}).get("objective")
+        if not b or not w:
+            return None
+        return b / w
+
+    def to_doc(self) -> dict:
+        from .report import result_doc
+
+        return result_doc(self)
+
+    def table(self) -> str:
+        from .report import format_table
+
+        return format_table(self)
+
+
+# ---------------------------------------------------------------------------
+# predict phase — no compilation
+# ---------------------------------------------------------------------------
+
+def _tokens_per_launch(spec, batch: int) -> int:
+    """Outputs produced by one forward launch: C-slow streams × batch ×
+    (sequence steps for recurrent cells, 1 inference for the MLP form)."""
+    steps = spec.seq_len if spec.cell != "mlp" else 1
+    return max(1, spec.c_slow) * max(1, batch) * max(1, steps)
+
+
+def resource_score(rr) -> float:
+    """Scalar area proxy from a :class:`~repro.codegen.ResourceReport`:
+    DSP lanes weighted by word width, plus ROM and register bits — the
+    quantities the paper's Table IV trades against cycle count."""
+    return (rr.dsp_macc_lanes * rr.width_bits + rr.rom_bits
+            + rr.state_reg_bits)
+
+
+def predict_candidate(cand: Candidate, batch: int) -> dict:
+    """Cost-model pass for ONE candidate: IR build + rtlsim cycle estimate +
+    IR resource report.  No XLA lowering, no pallas trace, no execution."""
+    from repro.codegen import build_program, report_program, rtlsim
+
+    program = build_program(cand.spec)
+    rr = report_program(program)
+    cycles = rtlsim.fsm_cycle_estimate(program)
+    res = resource_score(rr)
+    tokens = _tokens_per_launch(cand.spec, batch)
+    # Backend handicap: none.  The cycle model is the paper's FSM — it ranks
+    # *schedules*, not XLA-vs-pallas runtimes; both backends of the same
+    # schedule share a prediction and the measure pass separates them.
+    scores = {
+        "latency": float(cycles),
+        "throughput": float(cycles) / tokens,
+        "resources": float(res),
+    }
+    return {"fsm_cycles": int(cycles),
+            "flops_per_inference": int(rr.flops_per_inference),
+            "dsp_macc_lanes": int(rr.dsp_macc_lanes),
+            "rom_bits": int(rr.rom_bits),
+            "state_reg_bits": int(rr.state_reg_bits),
+            "width_bits": int(rr.width_bits),
+            "resource_score": float(res),
+            "tokens_per_launch": tokens,
+            "scores": scores}
+
+
+def predict_rank(cands: Sequence[Candidate], objective: str,
+                 batch: int) -> list[Scored]:
+    """Predict-phase ranking: ascending predicted score, ties broken by the
+    ledger key — a fixed grid therefore always ranks identically."""
+    if objective not in OBJECTIVES:
+        raise ValueError(
+            f"unknown objective '{objective}'; one of {OBJECTIVES}")
+    scored = [Scored(cand=c, predicted=predict_candidate(c, batch))
+              for c in cands]
+    scored.sort(key=lambda s: (s.predicted["scores"][objective], s.key))
+    return scored
+
+
+# ---------------------------------------------------------------------------
+# measure phase — compiles top-k through the synthesize memo cache
+# ---------------------------------------------------------------------------
+
+def measure_candidate(cand: Candidate, batch: int) -> dict | None:
+    """Compile + time one candidate via ``synthesize`` (memo-cached), then
+    read the measured wall-clock back out of the process ledger.  Returns
+    ``{"wall_us", "tokens", ...}`` or None when measurement produced no
+    wall-clock (exotic backends); swapped out by tests for a stub timer."""
+    from repro.core.synthesis import _ledger_key, synthesize
+
+    synthesize(cand.spec, batch=batch, **cand.synth_kwargs())
+    lkey = _ledger_key(cand.spec, batch, cand.backend, cand.double_buffer,
+                       cand.chunk, cand.block_b)
+    rows = obs_lib.OBS.ledger.report(match=lkey)
+    row = next((r for r in rows if r["program"] == lkey), None)
+    if row is None or row.get("measured_wall_us") is None:
+        return None
+    return {"wall_us": float(row["measured_wall_us"]),
+            "ledger_key": lkey,
+            "predicted_fsm_cycles": row.get("fsm_cycles"),
+            "implied_clock_mhz": row.get("implied_clock_mhz")}
+
+
+def _measured_objective(s: Scored, objective: str) -> float:
+    if objective == "resources":
+        # area is exact from the IR — "measuring" it is the predict number
+        return s.predicted["resource_score"]
+    wall = s.measured["wall_us"]
+    if objective == "throughput":
+        return wall / s.predicted["tokens_per_launch"]   # us per token
+    return wall                                          # latency: us/launch
+
+
+# ---------------------------------------------------------------------------
+# the loop
+# ---------------------------------------------------------------------------
+
+def tune(spec, optimize: str = "latency", budget: int | None = None,
+         batch: int | None = None, *,
+         backends: Sequence[str] = ("xla", "pallas"),
+         space_kwargs: dict | None = None,
+         measure_fn: Callable[[Candidate, int], dict | None] | None = None,
+         validate_fn: Callable[..., Any] | None = None) -> TuneResult:
+    """Close the Fig. 10 loop for ``spec``: enumerate → predict → measure →
+    validate → Pareto report.
+
+    ``budget`` caps the number of candidates that get compiled/timed
+    (default :data:`DEFAULT_BUDGET`); the predict pass always covers the
+    whole space.  ``measure_fn`` / ``validate_fn`` are dependency seams for
+    tests (stub timer, injected parity breaks) and default to the real
+    :func:`measure_candidate` / ``difftest.validate_candidate``.
+    """
+    from repro.core.synthesis import _cache_key, synthesize
+
+    budget = DEFAULT_BUDGET if budget is None else int(budget)
+    if budget < 1:
+        raise ValueError(f"budget={budget} must be >= 1")
+    batch = batch or 1
+    measure_fn = measure_fn or measure_candidate
+    if validate_fn is None:
+        from repro.verify.difftest import validate_candidate as validate_fn
+
+    O = obs_lib.OBS
+    with O.tracer.span("tune", cat="tune",
+                       args={"spec": spec.name, "objective": optimize}):
+        cands = enumerate_space(spec, backends=backends,
+                                **(space_kwargs or {}))
+        scored = predict_rank(cands, optimize, batch)
+        O.metrics.counter("tune_candidates", "design points enumerated",
+                          phase="predict").inc(len(scored))
+        log.info(f"tune[{spec.name}|{optimize}]: {len(scored)} candidates, "
+                 f"measuring top {min(budget, len(scored))} (+baseline)")
+
+        # measure set: top-k predicted + the default-synthesis baseline
+        base = baseline_candidate(spec, backend=backends[0])
+        to_measure = scored[:budget]
+        base_scored = next((s for s in to_measure if s.cand == base), None)
+        if base_scored is None:
+            base_scored = next((s for s in scored if s.cand == base), None)
+            if base_scored is None:
+                base_scored = Scored(cand=base,
+                                     predicted=predict_candidate(base, batch))
+            to_measure = to_measure + [base_scored]
+
+        measured: list[Scored] = []
+        for s in to_measure:
+            with O.tracer.span("tune.measure", cat="tune",
+                               args={"candidate": s.key}):
+                s.measured = measure_fn(s.cand, batch)
+            if s.measured is None and optimize != "resources":
+                log.info(f"tune: no measurement for {s.key}; dropped")
+                continue
+            s.measured = s.measured or {}
+            s.measured["objective"] = _measured_objective(s, optimize)
+            measured.append(s)
+        O.metrics.counter("tune_candidates", "design points enumerated",
+                          phase="measure").inc(len(measured))
+        if not measured:
+            raise RuntimeError(
+                f"tune[{spec.name}]: no candidate produced a measurement")
+        measured.sort(key=lambda s: (s.measured["objective"], s.key))
+
+        # difftest gate: walk the measured ranking until parity holds
+        best = None
+        for s in measured:
+            res = validate_fn(s.cand.spec, batch=batch)
+            s.validated = bool(res.ok)
+            if res.ok:
+                best = s
+                break
+            s.parity_error = res.error or "parity failure"
+            O.metrics.counter("tune_parity_rejects",
+                              "candidates rejected by the difftest gate").inc()
+            log.info(f"tune: difftest REJECTED {s.key}: {s.parity_error}")
+        if best is None:
+            raise RuntimeError(
+                f"tune[{spec.name}]: every measured candidate failed the "
+                "difftest parity gate — this is a codegen bug, not a tuning "
+                "failure; run python -m repro.verify.difftest")
+
+        front = pareto_front([(s.measured["objective"],
+                               s.predicted["resource_score"])
+                              for s in measured])
+        pareto = [measured[i] for i in front]
+
+        # the winner's reproducible synthesis: memo key + final report
+        report = None
+        if measure_fn is measure_candidate:
+            report = synthesize(best.cand.spec, batch=batch,
+                                **best.cand.synth_kwargs())
+        cache_key = _cache_key(best.cand.spec, batch, best.cand.backend,
+                               best.cand.double_buffer, best.cand.chunk,
+                               best.cand.block_b)
+    return TuneResult(spec=spec, objective=optimize, best=best,
+                      baseline=base_scored, scored=scored, measured=measured,
+                      pareto=pareto, report=report, cache_key=cache_key)
+
+
+__all__ = ["DEFAULT_BUDGET", "OBJECTIVES", "Scored", "TuneResult",
+           "measure_candidate", "predict_candidate", "predict_rank",
+           "resource_score", "tune"]

@@ -1,0 +1,127 @@
+"""Design-space enumeration over the synthesis knobs (paper Fig. 10).
+
+A :class:`Candidate` is one point of the space: the base spec with
+``unroll`` / ``c_slow`` / ``quant_bits`` overridden, plus the backend and
+its pallas-only params (``double_buffer`` / ``chunk`` / ``block_b``).
+:func:`enumerate_space` expands the cross product, drops combinations the
+:mod:`repro.codegen.knobs` metadata marks invalid for *some* of the
+requested backends, and raises immediately when a user-supplied knob value
+is invalid for *every* requested backend — a typo'd grid fails at
+enumeration, not three minutes into the measure pass.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Sequence
+
+from repro.codegen import knobs
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One knob assignment.  ``spec`` already carries the spec-level knobs
+    (unroll / c_slow / quant_bits baked into the frozen dataclass)."""
+
+    spec: Any               # NetworkSpec (duck-typed: no import cycle)
+    backend: str
+    double_buffer: bool = True
+    chunk: int | None = None
+    block_b: int | None = None
+
+    @property
+    def key(self) -> str:
+        """The predicted-vs-measured ledger key this candidate lands on
+        (batch-less form; the search adds the batch at measure time)."""
+        from repro.core.synthesis import _ledger_key
+
+        return _ledger_key(self.spec, None, self.backend,
+                           self.double_buffer, self.chunk, self.block_b)
+
+    def knobs_dict(self) -> dict:
+        return {"backend": self.backend,
+                "unroll": self.spec.unroll,
+                "c_slow": self.spec.c_slow,
+                "quant_bits": self.spec.quant_bits,
+                "double_buffer": self.double_buffer,
+                "chunk": self.chunk,
+                "block_b": self.block_b}
+
+    def synth_kwargs(self) -> dict:
+        """kwargs that reproduce this candidate through ``synthesize()``."""
+        return {"backend": self.backend,
+                "double_buffer": self.double_buffer,
+                "chunk": self.chunk, "block_b": self.block_b}
+
+
+def baseline_candidate(spec, backend: str = "xla") -> Candidate:
+    """The default-synthesis reference point every tune run must beat:
+    ``unroll=1, c_slow=1``, no quantization, default tiling."""
+    base = dataclasses.replace(spec, unroll=1, c_slow=1, quant_bits=None)
+    return Candidate(spec=base, backend=backend)
+
+
+def enumerate_space(spec, *,
+                    backends: Sequence[str] = ("xla", "pallas"),
+                    unroll: Sequence[int] = knobs.DEFAULT_UNROLL,
+                    c_slow: Sequence[int] = knobs.DEFAULT_C_SLOW,
+                    quant_bits: Sequence[int | None] = knobs.DEFAULT_QUANT_BITS,
+                    double_buffer: Sequence[bool] = knobs.DEFAULT_DOUBLE_BUFFER,
+                    chunk: Sequence[int | None] = knobs.DEFAULT_CHUNK,
+                    block_b: Sequence[int | None] = knobs.DEFAULT_BLOCK_B,
+                    ) -> list[Candidate]:
+    """Cross product of the knob grids, validity-filtered and deduped.
+
+    Pallas-only knobs are normalized away on other backends (one candidate,
+    not ``len(double_buffer)`` aliases of it).  A knob *value* that
+    :func:`repro.codegen.knobs.knob_reason` rejects for every requested
+    backend raises ``ValueError`` with the per-backend reasons — partial
+    validity (e.g. ``quant_bits=8`` valid on pallas, invalid on xla for a
+    recurrent cell) just prunes those pairs.
+    """
+    from repro.codegen import BACKENDS
+
+    for b in backends:
+        if b not in BACKENDS:
+            raise ValueError(f"unknown backend '{b}'; available: {BACKENDS}")
+    if not backends:
+        raise ValueError("enumerate_space: at least one backend required")
+
+    # fail fast on knob values invalid everywhere (satellite contract:
+    # "raise at enumeration, not mid-search")
+    for name, values in (("unroll", unroll), ("c_slow", c_slow),
+                         ("quant_bits", quant_bits)):
+        for v in values:
+            reasons = {}
+            for b in backends:
+                kw = {name: v} if name != "quant_bits" else {"quant_bits": v}
+                reasons[b] = knobs.knob_reason(b, spec.cell, **kw)
+            if all(r is not None for r in reasons.values()):
+                detail = "; ".join(f"{b}: {r}" for b, r in reasons.items())
+                raise ValueError(
+                    f"{name}={v!r} is invalid for every requested backend "
+                    f"({detail})")
+
+    seen: set[tuple] = set()
+    out: list[Candidate] = []
+    for b, u, c, q, db, ch, bb in itertools.product(
+            backends, unroll, c_slow, quant_bits, double_buffer, chunk,
+            block_b):
+        db, ch, bb = knobs.normalize_pallas_knobs(b, db, ch, bb)
+        if knobs.knob_reason(b, spec.cell, unroll=u, c_slow=c, quant_bits=q,
+                             double_buffer=db, chunk=ch,
+                             block_b=bb) is not None:
+            continue
+        cand = Candidate(
+            spec=dataclasses.replace(spec, unroll=u, c_slow=c, quant_bits=q),
+            backend=b, double_buffer=db, chunk=ch, block_b=bb)
+        dedup = (cand.spec, b, db, ch, bb)
+        if dedup in seen:
+            continue
+        seen.add(dedup)
+        out.append(cand)
+    return out
+
+
+__all__ = ["Candidate", "baseline_candidate", "enumerate_space"]

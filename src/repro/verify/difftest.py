@@ -223,6 +223,24 @@ def run_case(case: Case) -> CaseResult:
     )
 
 
+def validate_candidate(spec, batch: int = 2, seed: int = 0) -> CaseResult:
+    """Single-candidate parity gate — the tuner's acceptance check.
+
+    Runs the full differential contract on ONE spec: legacy / XLA / Pallas
+    float parity ≤ ``FLOAT_ATOL`` and rtlsim bit-exactness against the
+    fixed-point golden model at the spec's word width.  A crash counts as a
+    failure (``ok=False`` with the exception recorded), never an escape —
+    the tuner must not ship a configuration that can't even execute.
+    """
+    case = Case(seed=seed, spec=spec, batch=batch)
+    try:
+        return run_case(case)
+    except Exception as exc:
+        return CaseResult(case=case, ok=False, float_err=float("nan"),
+                          bit_exact=False, max_code_delta=-1,
+                          error=f"{type(exc).__name__}: {exc}")
+
+
 def run_seeds(seeds, verbose: bool = False):
     """Run a batch of seeds; returns (results, failures-excluding-xfails)."""
     results, failures = [], []

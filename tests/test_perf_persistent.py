@@ -226,9 +226,14 @@ def test_fold_streams_roundtrip():
 # int8 gate MACC (paper's fixed-point datapath)
 # ---------------------------------------------------------------------------
 
-def test_int8_macc_matches_int8_matmul_ref():
-    """A one-macc graph on the quantized path reproduces the
-    ``kernels/int8_matmul`` quantize→int32-MACC→rescale semantics."""
+def test_int8_macc_weight_only_semantics():
+    """A one-macc graph on the quantized path computes ``x @ dequant(W)``
+    exactly (weight-only int8: per-output-channel scale fused after the
+    dot), and pre-packed int8 consts (``prequantize_consts``) reproduce the
+    raw-float-const path bit for bit — the contract that lets synthesis
+    pack ROM pages once and stream them through the double-buffer DMA."""
+    from repro.kernels.int8_matmul.ops import quantize_per_channel
+
     D, N, B = 6, 8, 4
     g = GraphBuilder()
     u = g.input("u", D)
@@ -242,9 +247,18 @@ def test_int8_macc_matches_int8_matmul_ref():
     Wv = jax.random.normal(jax.random.PRNGKey(0), (D, N))
     x = jax.random.normal(jax.random.PRNGKey(1), (B, D))
     _, ys = run({"W": Wv}, {"h": jnp.zeros((B, N))}, x[:, None, :])
-    ref = quantized_matmul(x, Wv)     # the hand-written int8 kernel path
+    w_q, s = quantize_per_channel(Wv, axis=-2)
+    ref = (x @ w_q.astype(jnp.float32)) * s        # weight-only reference
     np.testing.assert_allclose(np.asarray(ys[:, 0]), np.asarray(ref),
-                               atol=1e-5)
+                               atol=1e-6)
+    # activations are NOT quantized on this path (the old dynamic-activation
+    # datapath is gone): full-precision x flows into the dot
+    assert not np.allclose(np.asarray(ref), np.asarray(quantized_matmul(x, Wv)),
+                           atol=1e-6)
+    packed = pallas_backend.prequantize_consts(graph, {"W": Wv}, 8)
+    assert packed["W"].dtype == jnp.int8 and "W.scale" in packed
+    _, ys2 = run(packed, {"h": jnp.zeros((B, N))}, x[:, None, :])
+    np.testing.assert_array_equal(np.asarray(ys), np.asarray(ys2))
 
 
 @pytest.mark.parametrize("cell", ["lstm", "gru", "ssm"])

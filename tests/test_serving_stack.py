@@ -141,6 +141,48 @@ def test_chunked_prefill_bounds_tick_and_unblocks_decode(smollm):
     assert len(longr.out_tokens) == 2
 
 
+def test_adaptive_prefill_bounds_contended_ticks_only(smollm):
+    """Adaptive chunking: prefill arriving on an idle server drains whole
+    (no fixed-chunk dispatch tax), but the chunk bound still holds on every
+    tick where a live slot is decoding — and greedy outputs stay identical
+    to the unchunked run."""
+    cfg, params = smollm
+    long_prompt = list(np.random.default_rng(7).integers(1, cfg.vocab, size=24))
+
+    def traffic():
+        longr = Request(uid=99, prompt=list(long_prompt), max_new_tokens=2)
+        return [longr] + _requests(cfg.vocab, n=1, max_new=4, seed=1)
+
+    base, _ = _drain(cfg, params, traffic(), slots=2, max_seq=64)
+
+    # all traffic fits the slots up-front → the first tick is uncontended
+    # and drains whole prompts; nothing ever prefills under contention
+    ad, srv = _drain(cfg, params, traffic(), slots=2, max_seq=64,
+                     prefill_chunk=4, prefill_adaptive=True)
+    st = srv.stats()["prefill"]
+    assert ad == base
+    assert st["adaptive"] is True
+    assert st["max_prompt_steps_per_tick"] >= 24      # uncontended drain
+    assert st["max_prompt_steps_contended_tick"] == 0
+
+    # long prompt submitted while a short request is decoding → its prefill
+    # is contended and must honor the fixed chunk bound
+    srv = DecodeServer(cfg, params, num_slots=2, max_seq=64,
+                       prefill_chunk=4, prefill_adaptive=True)
+    short = _requests(cfg.vocab, n=1, max_new=6, seed=1)[0]
+    srv.submit(short)
+    srv.step()                                         # short is now live
+    srv.submit(Request(uid=99, prompt=list(long_prompt), max_new_tokens=2))
+    srv.run_until_drained()
+    st = srv.stats()["prefill"]
+    assert 0 < st["max_prompt_steps_contended_tick"] <= 4
+
+    # adaptive without a chunk size is a config error
+    with pytest.raises(ValueError, match="prefill_adaptive"):
+        DecodeServer(cfg, params, num_slots=2, max_seq=64,
+                     prefill_adaptive=True)
+
+
 # ---------------------------------------------------------------------------
 # radix prefix cache
 # ---------------------------------------------------------------------------

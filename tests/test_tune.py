@@ -1,0 +1,265 @@
+"""Auto-tuner tests: space enumeration validity, deterministic predict
+ranking, Pareto math, the stubbed measure pass, and the difftest parity
+gate.
+
+The measure/validate phases use the tuner's dependency seams
+(``measure_fn`` / ``validate_fn``) so the loop's selection logic is tested
+exactly — deterministic stub timings, injected parity breaks — without
+compiling dozens of candidates; one end-to-end test runs the real pipeline
+on a tiny grid.
+"""
+
+import dataclasses
+
+import pytest
+
+from repro.codegen import knobs
+from repro.core.synthesis import NetworkSpec, _cache_key, _ledger_key
+from repro.tune import (Candidate, TuneResult, baseline_candidate, dominates,
+                        enumerate_space, pareto_front, predict_rank,
+                        result_doc, tune)
+from repro.verify.difftest import CaseResult, validate_candidate
+
+MLP = NetworkSpec(3, 2, 4, 2)
+LSTM = NetworkSpec(2, 1, 4, 2, cell="lstm", seq_len=4)
+
+
+# ---------------------------------------------------------------------------
+# knob metadata + space enumeration
+# ---------------------------------------------------------------------------
+
+def test_knob_reason_mirrors_quant_analysis():
+    # xla recurrent quantization has no path; pallas has (lut / int8 MACC)
+    assert knobs.quant_reason("xla", "lstm", 8) is not None
+    assert knobs.quant_reason("pallas", "lstm", 8) is None
+    assert knobs.quant_reason("verilog", "lstm", 16) is None
+    # mlp fixed-point SNR analysis runs everywhere
+    assert knobs.quant_reason("xla", "mlp", 12) is None
+    # af-free cell: pallas only below the int8 MACC threshold
+    assert knobs.quant_reason("pallas", "ssm", 8) is None
+    assert knobs.quant_reason("pallas", "ssm", 16) is not None
+    # outside rtlsim's verifiable word range: invalid everywhere
+    for backend in ("xla", "pallas", "verilog"):
+        assert knobs.quant_reason(backend, "mlp", 4) is not None
+        assert knobs.quant_reason(backend, "mlp", 64) is not None
+
+
+def test_enumerate_rejects_value_invalid_everywhere():
+    # quant_bits=12 on a recurrent cell: no xla path, and the pallas LUT
+    # range check passes it — so xla-only must raise, xla+pallas must prune
+    with pytest.raises(ValueError, match="invalid for every requested"):
+        enumerate_space(LSTM, backends=("xla",), quant_bits=(12,))
+    with pytest.raises(ValueError, match="outside rtlsim"):
+        enumerate_space(MLP, quant_bits=(4,))
+    with pytest.raises(ValueError, match="invalid for every requested"):
+        enumerate_space(NetworkSpec(2, 1, 4, 2, cell="ssm", seq_len=4),
+                        backends=("pallas",), quant_bits=(16,))
+    with pytest.raises(ValueError, match="unknown backend"):
+        enumerate_space(MLP, backends=("xla", "cuda"))
+    with pytest.raises(ValueError, match="unroll=0"):
+        enumerate_space(MLP, unroll=(0,))
+
+
+def test_enumerate_prunes_partial_validity():
+    cands = enumerate_space(LSTM, backends=("xla", "pallas"),
+                            unroll=(1,), c_slow=(1,), quant_bits=(None, 8),
+                            double_buffer=(True,))
+    combos = {(c.backend, c.spec.quant_bits) for c in cands}
+    # xla+8 pruned (no recurrent quant path); the other three survive
+    assert combos == {("xla", None), ("pallas", None), ("pallas", 8)}
+
+
+def test_enumerate_dedups_pallas_only_knobs():
+    cands = enumerate_space(MLP, backends=("xla",), unroll=(1,), c_slow=(1,),
+                            quant_bits=(None,), double_buffer=(True, False))
+    # double_buffer normalizes away on xla: ONE candidate, not two aliases
+    assert len(cands) == 1
+    assert cands[0].double_buffer is True
+    # and the candidate's ledger key matches synthesis' (no pallas tags)
+    assert cands[0].key == _ledger_key(cands[0].spec, None, "xla")
+
+
+def test_candidate_key_and_cache_key_roundtrip():
+    cand = Candidate(spec=dataclasses.replace(LSTM, unroll=2, quant_bits=8),
+                     backend="pallas", double_buffer=False)
+    assert cand.key == "lstm_2i_1x4_2o|pallas|u2|c1|q8|db0"
+    ck = _cache_key(cand.spec, 2, cand.backend, cand.double_buffer,
+                    cand.chunk, cand.block_b)
+    assert ck == (cand.spec, 2, "pallas", False, None, None)
+    kw = cand.synth_kwargs()
+    assert kw == {"backend": "pallas", "double_buffer": False,
+                  "chunk": None, "block_b": None}
+
+
+# ---------------------------------------------------------------------------
+# predict phase
+# ---------------------------------------------------------------------------
+
+def test_predict_rank_deterministic_and_sorted():
+    cands = enumerate_space(LSTM, backends=("xla", "pallas"),
+                            unroll=(1, 2), c_slow=(1, 2),
+                            quant_bits=(None, 8), double_buffer=(True,))
+    a = predict_rank(cands, "latency", batch=2)
+    b = predict_rank(list(reversed(cands)), "latency", batch=2)
+    assert [s.key for s in a] == [s.key for s in b]
+    scores = [s.predicted["scores"]["latency"] for s in a]
+    assert scores == sorted(scores)
+    # unroll shortens the FSM schedule -> strictly fewer predicted cycles
+    by_key = {s.key: s.predicted["fsm_cycles"] for s in a}
+    assert by_key["lstm_2i_1x4_2o|xla|u2|c1"] \
+        < by_key["lstm_2i_1x4_2o|xla|u1|c1"]
+    with pytest.raises(ValueError, match="unknown objective"):
+        predict_rank(cands, "power", batch=2)
+
+
+# ---------------------------------------------------------------------------
+# pareto math
+# ---------------------------------------------------------------------------
+
+def test_dominates_and_front_synthetic():
+    assert dominates((1.0, 1.0), (2.0, 2.0))
+    assert dominates((1.0, 2.0), (1.0, 3.0))
+    assert not dominates((1.0, 1.0), (1.0, 1.0))        # equal: no strict win
+    assert not dominates((1.0, 3.0), (2.0, 2.0))        # trade-off
+    with pytest.raises(ValueError):
+        dominates((1.0,), (1.0, 2.0))
+    pts = [(3.0, 1.0), (1.0, 3.0), (2.0, 2.0), (4.0, 4.0), (2.0, 2.0)]
+    front = pareto_front(pts)
+    # (4,4) dominated; duplicates of (2,2) both kept; order preserved
+    assert front == [0, 1, 2, 4]
+    assert pareto_front([]) == []
+    assert pareto_front([(5.0, 5.0)]) == [0]
+
+
+# ---------------------------------------------------------------------------
+# measure phase (stubbed timer) + difftest gate
+# ---------------------------------------------------------------------------
+
+def _stub_measure(walls: dict, calls: list):
+    def fn(cand, batch):
+        calls.append(cand.key)
+        return {"wall_us": walls.get(cand.key, 500.0), "ledger_key": cand.key}
+    return fn
+
+
+def _ok_validator(*a, **k):
+    return CaseResult(case=None, ok=True, float_err=0.0, bit_exact=True,
+                      max_code_delta=0)
+
+
+def test_measure_budget_baseline_and_best_selection():
+    calls: list = []
+    # make a non-default candidate the fastest; baseline mid-pack
+    walls = {"lstm_2i_1x4_2o|xla|u2|c1": 10.0,
+             "lstm_2i_1x4_2o|xla|u1|c1": 40.0}
+    result = tune(LSTM, optimize="latency", budget=3, batch=2,
+                  backends=("xla",),
+                  space_kwargs={"unroll": (1, 2, 4), "c_slow": (1, 2),
+                                "quant_bits": (None,)},
+                  measure_fn=_stub_measure(walls, calls),
+                  validate_fn=_ok_validator)
+    # budget 3 + always-measured baseline; baseline measured exactly once
+    assert len(calls) <= 4
+    assert calls.count("lstm_2i_1x4_2o|xla|u1|c1") == 1
+    assert result.best.key == "lstm_2i_1x4_2o|xla|u2|c1"
+    assert result.best.validated is True
+    assert result.baseline.cand == baseline_candidate(LSTM, backend="xla")
+    assert result.speedup == pytest.approx(4.0)
+    # stubbed measure: no real synthesis -> no memo report, but the winner's
+    # cache key is still the reproducible handle
+    assert result.report is None
+    assert result.cache_key == (result.best.cand.spec, 2, "xla", True,
+                                None, None)
+    # measured list sorted by objective; pareto front non-empty subset
+    objs = [s.measured["objective"] for s in result.measured]
+    assert objs == sorted(objs)
+    assert result.pareto and set(s.key for s in result.pareto) \
+        <= set(s.key for s in result.measured)
+    with pytest.raises(ValueError, match="budget"):
+        tune(LSTM, budget=0)
+
+
+def test_difftest_gate_rejects_parity_break():
+    calls: list = []
+    walls = {"lstm_2i_1x4_2o|xla|u2|c1": 10.0,
+             "lstm_2i_1x4_2o|xla|u1|c1": 40.0}
+    broken = "lstm_2i_1x4_2o|xla|u2|c1"
+
+    def validator(spec, batch=2, **k):
+        cand_key = _ledger_key(spec, None, "xla")
+        if cand_key == broken:  # injected parity break on the fastest config
+            return CaseResult(case=None, ok=False, float_err=1.0,
+                              bit_exact=False, max_code_delta=99,
+                              error="injected parity break")
+        return _ok_validator()
+
+    result = tune(LSTM, optimize="latency", budget=3, batch=2,
+                  backends=("xla",),
+                  space_kwargs={"unroll": (1, 2, 4), "c_slow": (1, 2),
+                                "quant_bits": (None,)},
+                  measure_fn=_stub_measure(walls, calls),
+                  validate_fn=validator)
+    # the fastest config is rejected with the parity error recorded, and the
+    # winner is the best VALIDATED config
+    assert result.best.key != broken
+    assert result.best.validated is True
+    rejected = next(s for s in result.measured if s.key == broken)
+    assert rejected.validated is False
+    assert "injected parity break" in rejected.parity_error
+
+
+def test_everything_broken_raises():
+    def all_fail(spec, batch=2, **k):
+        return CaseResult(case=None, ok=False, float_err=1.0,
+                          bit_exact=False, max_code_delta=9, error="nope")
+    with pytest.raises(RuntimeError, match="difftest parity gate"):
+        tune(LSTM, optimize="latency", budget=2, batch=2, backends=("xla",),
+             space_kwargs={"unroll": (1, 2), "c_slow": (1,),
+                           "quant_bits": (None,)},
+             measure_fn=_stub_measure({}, []), validate_fn=all_fail)
+
+
+def test_report_doc_schema_roundtrip():
+    from repro.obs.check import check_tune_doc
+
+    result = tune(LSTM, optimize="latency", budget=2, batch=2,
+                  backends=("xla",),
+                  space_kwargs={"unroll": (1, 2), "c_slow": (1,),
+                                "quant_bits": (None,)},
+                  measure_fn=_stub_measure({}, []),
+                  validate_fn=_ok_validator)
+    doc = result_doc(result)
+    assert check_tune_doc(doc) == []
+    assert doc["schema"] == "repro.tune/v1"
+    assert doc["best"]["key"] in {c["key"] for c in doc["candidates"]}
+    # schema drift is caught
+    broken = dict(doc)
+    broken.pop("best")
+    assert any("best" in e for e in check_tune_doc(broken))
+    # and the table renders every measured row
+    table = result.table()
+    for s in result.measured:
+        assert s.key in table
+
+
+def test_validate_candidate_real_ok():
+    res = validate_candidate(MLP, batch=2)
+    assert res.ok and res.float_err <= 1e-5
+
+
+@pytest.mark.slow
+def test_tune_end_to_end_real_measure():
+    """Real pipeline, tiny grid: measured wall-clock lands in the ledger,
+    the winner is validated, and the report doc passes the schema check."""
+    from repro.obs.check import check_tune_doc
+
+    result = tune(MLP, optimize="latency", budget=2, batch=2,
+                  backends=("xla",),
+                  space_kwargs={"unroll": (1, 2), "c_slow": (1,),
+                                "quant_bits": (None,),
+                                "double_buffer": (True,)})
+    assert isinstance(result, TuneResult)
+    assert result.best.validated is True
+    assert result.best.measured["wall_us"] > 0
+    assert result.report is not None          # winner's SynthesisReport
+    assert check_tune_doc(result_doc(result)) == []

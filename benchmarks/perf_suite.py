@@ -13,6 +13,8 @@ Measures, on identical workloads:
       decoding), while staying greedy-token-identical to the unchunked run
   serve_shared_prefix — radix prefix cache on repeated prompts; a full hit
       must recompute 0 prompt steps
+  serve_fault_overhead — the robustness layer's hot-path cost: fault
+      machinery off vs armed-but-never-firing, greedy-token-identical
 
 Every record carries the same schema::
 
@@ -253,6 +255,77 @@ def _serving_bench(records: list, smoke: bool) -> None:
          f"recomputed={recomputed} saved={pc['prompt_steps_saved']}")
 
 
+def _fault_overhead_bench(records: list, smoke: bool) -> None:
+    """Cost of the robustness layer on the serving hot path.
+
+    Two servers over the serve_mixed traffic: one with NO fault plan (the
+    machinery-off row — one ``is None`` check per fault point, the
+    acceptance bound is <= 2% vs the pre-robustness stack) and one with an
+    ARMED plan whose rules never fire (``prob=0`` — the full opportunity-
+    counting + RNG cost).  Tokens must be greedy-identical across both."""
+    from repro.runtime import FaultPlan, FaultSpec
+
+    cfg = get_smoke_config("smollm-135m")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    long_len, max_new = (16, 3) if smoke else (32, 6)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(1, cfg.vocab, size=long_len))] + \
+        [list(rng.integers(1, cfg.vocab, size=int(rng.integers(2, 5))))
+         for _ in range(3)]
+
+    def traffic(off):
+        return [Request(uid=off + i, prompt=list(p), max_new_tokens=max_new)
+                for i, p in enumerate(prompts)]
+
+    def armed_plan():
+        return FaultPlan([FaultSpec("decode.dispatch", prob=0.0, times=None),
+                          FaultSpec("tick.slow", prob=0.0, times=None),
+                          FaultSpec("decode.nan_logits", prob=0.0,
+                                    times=None)], seed=0)
+
+    rows = [("off", None), ("armed", armed_plan())]
+    servers = {}
+    for name, plan in rows:
+        srv = DecodeServer(cfg, params, num_slots=2, max_seq=2 * long_len,
+                           faults=plan, watchdog_s=60.0)
+        for r in traffic(5000):
+            srv.submit(r)
+        srv.run_until_drained()        # warm window: per-instance jit
+        srv.stats(reset=True)
+        servers[name] = srv
+    outs = {}
+    walls = {name: [] for name, _ in rows}
+    for w in range(3):
+        off = w * 200
+        for name, _ in rows:
+            srv = servers[name]
+            for r in traffic(off):
+                srv.submit(r)
+            t0 = time.perf_counter()
+            srv.run_until_drained()
+            walls[name].append(time.perf_counter() - t0)
+            done = [r for r in srv.completed if off <= r.uid < off + 200]
+            win = {r.uid - off: list(r.out_tokens) for r in done}
+            outs.setdefault(name, win)
+            if win != outs[name]:
+                outs[name] = None      # windows must be token-identical
+    toks = sum(len(t) for t in (outs["off"] or {}).values())
+    best_off, best_armed = min(walls["off"]), min(walls["armed"])
+    rec = {"bench": "serve_fault_overhead",
+           "config": {"arch": cfg.name, "slots": 2, "long_len": long_len,
+                      "max_new": max_new},
+           "tokens_per_s": toks / best_off,
+           "syncs_per_token":
+               servers["off"].stats()["syncs_per_token"],
+           "armed_overhead_pct":
+               (best_armed / best_off - 1.0) * 100.0,
+           "greedy_identical": bool(
+               outs["off"] is not None and outs["off"] == outs["armed"])}
+    records.append(rec)
+    emit("serve_fault_overhead", best_off / max(toks, 1) * 1e6,
+         f"armed_overhead={rec['armed_overhead_pct']:+.1f}%")
+
+
 # ---------------------------------------------------------------------------
 # regression gate
 # ---------------------------------------------------------------------------
@@ -311,7 +384,8 @@ def check(fresh: dict, committed: dict) -> list[str]:
     for name, key, want in (("serve_mixed_chunked", "tick_bound_ok", True),
                             ("serve_mixed_chunked", "greedy_identical", True),
                             ("serve_shared_prefix", "prompt_steps_recomputed", 0),
-                            ("serve_shared_prefix", "greedy_identical", True)):
+                            ("serve_shared_prefix", "greedy_identical", True),
+                            ("serve_fault_overhead", "greedy_identical", True)):
         f = fresh_by.get(name)
         if f is not None and name in comm_by and f.get(key) != want:
             failures.append(f"{name}: {key}={f.get(key)!r}, expected {want!r}")
@@ -330,6 +404,7 @@ def run(out_dir: str = "experiments", smoke: bool = False,
     _cslow_bench(records, smoke)
     _int8_bench(records, smoke)
     _serving_bench(records, smoke)
+    _fault_overhead_bench(records, smoke)
     payload = {"suite": "perf", "smoke": smoke, "records": records}
     with open(OUT_JSON, "w") as fh:
         json.dump(payload, fh, indent=2)

@@ -43,6 +43,16 @@ def main() -> None:
                     default="priority",
                     help="request scheduler policy (priority classes + "
                          "fairness aging, or plain FIFO)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request TTL: expired requests retire with "
+                         "finish_reason='expired:queue'/'expired:decode'")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="stall watchdog bound: no serving progress for this "
+                         "many seconds aborts in-flight work (error:stalled)")
+    ap.add_argument("--shed", action="store_true",
+                    help="scheduler load shedding: reject the lowest-"
+                         "priority class when deadline math says the queue "
+                         "is unserviceable")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -65,7 +75,9 @@ def main() -> None:
                           block_k=args.block_k, persistent=args.persistent,
                           prefill_chunk=args.prefill_chunk,
                           prefix_cache_bytes=args.prefix_cache << 20,
-                          scheduler=SchedulerConfig(policy=args.scheduler))
+                          scheduler=SchedulerConfig(policy=args.scheduler,
+                                                    shed=args.shed),
+                          watchdog_s=args.watchdog_s)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -75,6 +87,7 @@ def main() -> None:
             uid=i,
             prompt=list(rng.integers(1, cfg.vocab, size=plen)),
             max_new_tokens=args.max_new,
+            deadline_s=args.deadline_s,
         ))
     done = server.run_until_drained()
     wall = time.perf_counter() - t0
@@ -100,6 +113,14 @@ def main() -> None:
     if served:
         print(f"TTFT   p50={np.percentile(ttfts, 50)*1e3:.0f}ms p95={np.percentile(ttfts, 95)*1e3:.0f}ms")
         print(f"E2E    p50={np.percentile(lats, 50)*1e3:.0f}ms p95={np.percentile(lats, 95)*1e3:.0f}ms")
+    health = stats["health"]
+    print(f"health: {health['status']} (quarantined={health['quarantined_slots']}, "
+          f"stalled_events={health['stalled_events']})")
+    reasons = {}
+    for r in done:
+        reasons[r.finish_reason] = reasons.get(r.finish_reason, 0) + 1
+    if set(reasons) - {"eos", "max_tokens"}:
+        print(f"finish reasons: {reasons}")
     for r in done[:3]:
         print(f"  req{r.uid}: prompt={r.prompt} -> {r.out_tokens}")
 

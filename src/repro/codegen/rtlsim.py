@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import sys
 
 import numpy as np
 
@@ -250,6 +251,9 @@ class RtlSimResult:
     cycles: int                         # FSM clocks (all C streams)
     width: int
     fmt: FixedPointFormat
+    # injected single-event upsets ({stream, step, stage, state, index, bit}
+    # per flip) — empty unless a fault plan watching 'rtlsim.seu' was active
+    seu_flips: list = dataclasses.field(default_factory=list)
 
 
 def _stage_serial(graph: DatapathGraph, unroll: int) -> int:
@@ -285,8 +289,40 @@ def _fsm_cycles_per_stream(program: Program, unroll: int, T: int,
     return 1 + load + T * step + ro_serial + 3
 
 
+def _seu_plan(fault_plan):
+    """Resolve the fault plan that watches ``rtlsim.seu`` — the explicit
+    argument, else the ambient plan IF ``repro.runtime.faults`` is already
+    imported (never import the runtime package from codegen)."""
+    if fault_plan is not None:
+        return fault_plan
+    m = sys.modules.get("repro.runtime.faults")
+    return m.get_plan() if m is not None else None
+
+
+def _seu_flip(plan, spec_f, states, qstages, width: int,
+              stream: int, step: int) -> dict:
+    """Apply one single-event upset: flip one bit of one word of one state
+    register (all choices drawn from the plan's seeded per-point RNG unless
+    pinned in the rule's payload), two's-complement semantics preserved."""
+    rng = plan.rng("rtlsim.seu")
+    pay = spec_f.payload
+    si = int(pay.get("stage", rng.randrange(len(qstages))))
+    st = states[si]
+    name = pay.get("state") or rng.choice(sorted(st))
+    arr = np.asarray(st[name], np.int64).copy()
+    flat = arr.reshape(-1)
+    idx = int(pay.get("index", rng.randrange(flat.size)))
+    bit = int(pay.get("bit", rng.randrange(width)))
+    flat[idx] = wrap(flat[idx] ^ (np.int64(1) << np.int64(bit)), width)
+    st[name] = arr
+    return {"stream": stream, "step": step,
+            "stage": qstages[si].stage.name, "state": name,
+            "index": idx, "bit": bit}
+
+
 def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
-             collect_states: bool = False) -> RtlSimResult:
+             collect_states: bool = False,
+             fault_plan=None) -> RtlSimResult:
     """Run the emitted Create_TopModule, bit-accurately, on real inputs.
 
     ``u``: mlp ``[B, L]``; recurrent ``[B, T, D]``; with ``c_slow = C > 1``
@@ -295,6 +331,13 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
 
     ``width`` overrides ``spec.quant_bits`` (default ``DEFAULT_WIDTH``).
     Returns :class:`RtlSimResult`; ``y`` is ``y_codes / 2**frac_bits``.
+
+    ``fault_plan`` (or the ambient :mod:`repro.runtime.faults` plan, when
+    that module is loaded) may schedule ``rtlsim.seu`` single-event upsets:
+    each register write-back is one opportunity to flip one seeded-random
+    bit in one state word — the FPGA-native soft-error class.  Every flip
+    is recorded in ``RtlSimResult.seu_flips`` so the golden-model diff can
+    attribute the divergence.
     """
     program.validate()
     spec = program.spec
@@ -323,9 +366,13 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
     beta_rom = (words_of(np.asarray(program.beta), fmt)   # [M, L]
                 if is_mlp else None)
 
+    plan = _seu_plan(fault_plan)
+    seu_watch = plan is not None and plan.watches("rtlsim.seu")
+    seu_flips: list[dict] = []
+
     ys, finals = [], {}
     cycles = 0
-    for u_s in streams:  # C independent interleaved streams
+    for ci, u_s in enumerate(streams):  # C independent interleaved streams
         u_q = words_of(u_s, fmt)
         if is_mlp:
             # Create_Layer_beta: x0 = beta · u (the βuδ[k] injection)
@@ -344,6 +391,11 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
                                              unroll=unroll)
                 states[si] = new_states
                 bus = out
+            if seu_watch:
+                spec_f = plan.fire("rtlsim.seu")
+                if spec_f is not None:
+                    seu_flips.append(_seu_flip(plan, spec_f, states,
+                                               qstages, W, ci, k))
         x_final = states[-1][program.readout_state]
         y = macc_layer(x_final, C_rom.T, W)
         cycles += _fsm_cycles_per_stream(program, unroll, T, is_mlp)
@@ -359,6 +411,7 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
         cycles=cycles,
         width=W,
         fmt=fmt,
+        seu_flips=seu_flips,
     )
 
 

@@ -26,6 +26,7 @@ are the user's resource/speed compromise (the paper's clk_max/clk_data knob).
 from __future__ import annotations
 
 import dataclasses
+import sys
 import time
 from typing import Any, Callable
 
@@ -192,9 +193,12 @@ class SynthesisReport:
     rtl: str | None = None              # backend="verilog": Table-I RTL text
     resources: Any = None               # backend="verilog": codegen.ResourceReport
     quant: dict | None = None           # quant_bits analysis (SNR / LUT mode)
+    fallback_from: str | None = None    # requested backend, when degraded
 
     def summary(self) -> str:
         extra = ""
+        if self.fallback_from is not None:
+            extra += f" (fallback<-{self.fallback_from})"
         if self.quant is not None:
             snr = self.quant.get("snr_db")
             extra += f" q{self.quant['bits']}" + (
@@ -354,59 +358,47 @@ def _measure_compiled(compiled, params, u_shape, key: str) -> None:
         pass
 
 
-def synthesize(spec: NetworkSpec, batch: int | None = None,
-               backend: str = "xla", *,
-               double_buffer: bool = True,
-               chunk: int | None = None,
-               block_b: int | None = None,
-               measure: bool = True,
-               optimize: str | None = None,
-               budget: int | None = None):
-    """spec → IR program → {XLA scan, fused Pallas kernel, Verilog RTL}.
+# Degradation order when a backend's compile step keeps failing: the fused
+# pallas kernel falls back to the plain XLA scan, and that falls back to the
+# unlowered reference forward ("ref": create_top_module + vmap — no codegen
+# IR in the compile path at all).  verilog's *compiled* artifact is the XLA
+# program, so it degrades straight to ref (RTL emission is unaffected).
+_SYNTH_FALLBACK: dict[str, tuple[str, ...]] = {
+    "pallas": ("xla", "ref"),
+    "xla": ("ref",),
+    "verilog": ("ref",),
+    "ref": (),
+}
 
-    All backends consume the same :mod:`repro.codegen` program, so
-    ``backend="xla"`` and ``backend="pallas"`` are output-equivalent and
-    ``backend="verilog"`` additionally attaches the Table-I RTL text plus a
-    resource report cross-checked against ``compiled.cost_analysis()``.
-    ``double_buffer`` forwards to the pallas backend (2-slot ROM prefetch
-    vs BlockSpec streaming); ``chunk`` / ``block_b`` override its tiling
-    block params.  Results are memoized by :func:`_cache_key`.
 
-    ``optimize="latency" | "throughput" | "resources"`` runs the paper's
-    Fig. 10 optimization loop instead of one fixed synthesis: the
-    :mod:`repro.tune` auto-tuner searches the knob space around ``spec``
-    (unroll × c_slow × quant_bits × double_buffer × backend × tiling),
-    measures the top-``budget`` predicted candidates, difftest-validates
-    the winner, and returns a :class:`repro.tune.TuneResult` whose
-    ``.report`` is the winning configuration's SynthesisReport.
+def _faults_mod():
+    """The ambient fault-injection module, WITHOUT importing the runtime
+    package: if ``repro.runtime.faults`` was never imported, no plan can be
+    installed and there is nothing to consult."""
+    return sys.modules.get("repro.runtime.faults")
 
-    Every first-time synthesis feeds the process observability scope
-    (:data:`repro.obs.OBS`): compile/cache-hit spans and counters, plus a
-    predicted-vs-measured ledger row joining the rtlsim FSM cycle estimate
-    and ``cost_analysis`` flops against measured wall-clock
-    (``measure=False`` skips the timed execution).
-    """
+
+def _is_transient(exc: BaseException) -> bool:
+    m = _faults_mod()
+    return m is not None and isinstance(exc, m.TransientFault)
+
+
+def _build_fwd(program, spec: NetworkSpec, backend: str, quant: dict | None,
+               double_buffer: bool, chunk: int | None, block_b: int | None):
+    """One backend's (fwd, params) — the compile target for the retry /
+    fallback loop in :func:`synthesize`."""
     from repro import codegen
 
-    if optimize is not None:
-        from repro.tune import tune
+    m = _faults_mod()
+    if m is not None:
+        m.maybe_raise("synth.compile")
 
-        return tune(spec, optimize=optimize, budget=budget, batch=batch)
-
-    O = obs_lib.OBS
-    if backend not in codegen.BACKENDS:
-        raise ValueError(
-            f"unknown backend '{backend}'; available: {codegen.BACKENDS}")
-    key = _cache_key(spec, batch, backend, double_buffer, chunk, block_b)
-    if key in _SYNTH_CACHE:
-        O.metrics.counter("synth_cache", "synthesize() memo", result="hit").inc()
-        return dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
-    O.metrics.counter("synth_cache", "synthesize() memo", result="miss").inc()
-
-    with O.tracer.span("synth.build_program", cat="synth",
-                       args={"spec": spec.name, "backend": backend}):
-        program = codegen.build_program(spec)
-    quant = _quant_analysis(spec, backend, program)
+    if backend == "ref":
+        ref_params, ref_fwd = create_top_module(spec)
+        fwd = jax.vmap(ref_fwd, in_axes=(None, 0))
+        if spec.c_slow > 1:
+            fwd = jax.vmap(fwd, in_axes=(None, 0))
+        return fwd, ref_params
 
     lut = None
     if quant is not None and quant["mode"] == "lut":
@@ -431,8 +423,78 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
             params["stages"] = [
                 pb.prequantize_consts(st.graph, sp, int8_bits)
                 for st, sp in zip(program.stages, params["stages"])]
-    else:  # "xla" and the verilog cross-check both compile the XLA program
-        fwd = codegen.xla_backend.compile_program(program)
+        return fwd, params
+    # "xla" and the verilog cross-check both compile the XLA program
+    return codegen.xla_backend.compile_program(program), params
+
+
+def synthesize(spec: NetworkSpec, batch: int | None = None,
+               backend: str = "xla", *,
+               double_buffer: bool = True,
+               chunk: int | None = None,
+               block_b: int | None = None,
+               measure: bool = True,
+               optimize: str | None = None,
+               budget: int | None = None,
+               retries: int = 2,
+               backoff_s: float = 0.05,
+               fallback: bool = True):
+    """spec → IR program → {XLA scan, fused Pallas kernel, Verilog RTL}.
+
+    All backends consume the same :mod:`repro.codegen` program, so
+    ``backend="xla"`` and ``backend="pallas"`` are output-equivalent and
+    ``backend="verilog"`` additionally attaches the Table-I RTL text plus a
+    resource report cross-checked against ``compiled.cost_analysis()``.
+    ``double_buffer`` forwards to the pallas backend (2-slot ROM prefetch
+    vs BlockSpec streaming); ``chunk`` / ``block_b`` override its tiling
+    block params.  Results are memoized by :func:`_cache_key`.
+
+    ``optimize="latency" | "throughput" | "resources"`` runs the paper's
+    Fig. 10 optimization loop instead of one fixed synthesis: the
+    :mod:`repro.tune` auto-tuner searches the knob space around ``spec``
+    (unroll × c_slow × quant_bits × double_buffer × backend × tiling),
+    measures the top-``budget`` predicted candidates, difftest-validates
+    the winner, and returns a :class:`repro.tune.TuneResult` whose
+    ``.report`` is the winning configuration's SynthesisReport.
+
+    Every first-time synthesis feeds the process observability scope
+    (:data:`repro.obs.OBS`): compile/cache-hit spans and counters, plus a
+    predicted-vs-measured ledger row joining the rtlsim FSM cycle estimate
+    and ``cost_analysis`` flops against measured wall-clock
+    (``measure=False`` skips the timed execution).
+
+    Robustness: a transient compile failure (an injected ``synth.compile``
+    fault, or a flaky backend) is retried up to ``retries`` times with
+    exponential ``backoff_s`` backoff; a backend that keeps failing degrades
+    down the pallas → xla → ref chain (``fallback=False`` re-raises
+    instead).  The returned report's ``backend`` is the backend that
+    actually compiled; ``fallback_from`` records the requested one, and the
+    ``synth_retries`` / ``synth_fallback{from_backend,to}`` counters track
+    both events.
+    """
+    from repro import codegen
+
+    if optimize is not None:
+        from repro.tune import tune
+
+        return tune(spec, optimize=optimize, budget=budget, batch=batch)
+
+    O = obs_lib.OBS
+    if backend != "ref" and backend not in codegen.BACKENDS:
+        raise ValueError(
+            f"unknown backend '{backend}'; available: {codegen.BACKENDS}")
+    key = _cache_key(spec, batch, backend, double_buffer, chunk, block_b)
+    if key in _SYNTH_CACHE:
+        O.metrics.counter("synth_cache", "synthesize() memo", result="hit").inc()
+        return dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
+    O.metrics.counter("synth_cache", "synthesize() memo", result="miss").inc()
+
+    with O.tracer.span("synth.build_program", cat="synth",
+                       args={"spec": spec.name, "backend": backend}):
+        program = codegen.build_program(spec)
+    # the REQUESTED backend's quant validation still raises on unsupported
+    # combinations (user error, not a fault to degrade around)
+    quant = _quant_analysis(spec, backend, program)
 
     u_shape = (spec.num_inputs,) if spec.cell == "mlp" \
         else (spec.seq_len, spec.num_inputs)
@@ -440,11 +502,46 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     if spec.c_slow > 1:  # C interleaved streams through the one datapath
         u_shape = (spec.c_slow,) + u_shape
     u = jax.ShapeDtypeStruct(u_shape, jnp.float32)
-    lower_s, compile_s, hlo_bytes, flops, peak, compiled = \
-        _analyze_compiled(fwd, params, u)
+
+    chain = (backend,) + (_SYNTH_FALLBACK.get(backend, ())
+                          if fallback else ())
+    analysis = None
+    used = backend
+    last_err: BaseException | None = None
+    for hop, bk in enumerate(chain):
+        if hop:
+            O.metrics.counter(
+                "synth_fallback", "backend fallback hops",
+                from_backend=chain[hop - 1], to=bk).inc()
+            try:
+                quant = _quant_analysis(spec, bk, program)
+            except ValueError:
+                quant = None    # degraded: quant not expressible here
+        for attempt in range(max(0, retries) + 1):
+            try:
+                fwd, bparams = _build_fwd(program, spec, bk, quant,
+                                          double_buffer, chunk, block_b)
+                analysis = _analyze_compiled(fwd, bparams, u)
+                break
+            except Exception as e:  # noqa: BLE001 — degrade, don't die
+                last_err = e
+                if _is_transient(e) and attempt < retries:
+                    O.metrics.counter("synth_retries",
+                                      "transient compile retries").inc()
+                    if backoff_s > 0:
+                        time.sleep(backoff_s * (2 ** attempt))
+                    continue
+                break   # non-transient, or retries exhausted: next backend
+        if analysis is not None:
+            used = bk
+            break
+    if analysis is None:
+        raise last_err
+    lower_s, compile_s, hlo_bytes, flops, peak, compiled = analysis
+    params = bparams
 
     # predicted-vs-measured ledger: the Fig. 10 loop's instrumentation
-    lkey = _ledger_key(spec, batch, backend, double_buffer, chunk, block_b)
+    lkey = _ledger_key(spec, batch, used, double_buffer, chunk, block_b)
     O.ledger.predict(
         lkey,
         fsm_cycles=codegen.rtlsim.fsm_cycle_estimate(program),
@@ -476,7 +573,8 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
         + (spec.num_outputs,),
         serial_depth=serial_depth_estimate(
             spec.serial_steps * spec.c_slow, spec.unroll),
-        backend=backend,
+        backend=used,
+        fallback_from=backend if used != backend else None,
         quant=quant,
         rtl=rtl,
         resources=resources,

@@ -39,6 +39,15 @@ def main() -> None:
                     help="radix prefix-cache byte budget in MB (0 = off)")
     ap.add_argument("--scheduler", choices=["priority", "fifo"],
                     default="priority")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request TTL (expired:queue / expired:decode)")
+    ap.add_argument("--watchdog-s", type=float, default=None,
+                    help="stall watchdog bound in seconds: no serving "
+                         "progress past the bound aborts in-flight work "
+                         "with finish_reason='error:stalled'")
+    ap.add_argument("--shed", action="store_true",
+                    help="reject the lowest-priority class when queue "
+                         "waits become unserviceable")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="enable tracing; write Perfetto-loadable trace JSON")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
@@ -64,21 +73,27 @@ def main() -> None:
                           prefill_chunk=args.prefill_chunk,
                           prefill_adaptive=args.prefill_adaptive,
                           prefix_cache_bytes=args.prefix_cache << 20,
-                          scheduler=SchedulerConfig(policy=args.scheduler),
-                          obs=obs)
+                          scheduler=SchedulerConfig(policy=args.scheduler,
+                                                    shed=args.shed),
+                          obs=obs, watchdog_s=args.watchdog_s)
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
     for i in range(args.requests):
         server.submit(Request(
             uid=i, prompt=list(rng.integers(1, cfg.vocab, size=int(rng.integers(2, 10)))),
-            max_new_tokens=args.max_new))
+            max_new_tokens=args.max_new, deadline_s=args.deadline_s))
     done = server.run_until_drained()
     wall = time.perf_counter() - t0
     toks = sum(len(r.out_tokens) for r in done)
     stats = server.stats()
+    health = stats["health"]
     log.info(f"served {len(done)} requests, {toks} tokens, {wall:.2f}s "
              f"({toks / wall:.1f} tok/s, "
              f"{stats['syncs_per_token']:.3f} syncs/token)")
+    log.info(f"health: {health['status']} "
+             f"(quarantined={health['quarantined_slots']}, "
+             f"stalled_events={health['stalled_events']}, "
+             f"queued={health['queued']})")
     if args.trace_out:
         obs.export_trace(args.trace_out)
         log.info(f"wrote trace ({len(obs.tracer.events())} events) -> "

@@ -9,7 +9,8 @@ build instead of silently producing a Perfetto file that won't load.
 
 Files are dispatched on content: a top-level ``traceEvents`` key is checked
 as a Chrome trace, a ``repro.tune`` schema (or ``suite: tune``) as an
-auto-tuner Pareto report, anything else as a metrics document.
+auto-tuner Pareto report, a ``repro.chaos`` schema (or ``suite: chaos``) as
+a fault-injection report, anything else as a metrics document.
 """
 
 from __future__ import annotations
@@ -183,6 +184,74 @@ def check_tune_doc(doc) -> list[str]:
     return errs
 
 
+def check_chaos_doc(doc) -> list[str]:
+    """Validate a ``repro.chaos/v1`` fault-injection report: every scenario
+    carries a verdict + its fault-plan hit counts, the per-class table only
+    names registered fault points, and the aggregate flags are consistent
+    with the scenarios they summarize."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["chaos: top level must be an object"]
+    if doc.get("schema") != "repro.chaos/v1":
+        errs.append(f"chaos: unknown schema {doc.get('schema')!r}")
+    if doc.get("suite") != "chaos":
+        errs.append("chaos: 'suite' must be 'chaos'")
+    if not isinstance(doc.get("seed"), int):
+        errs.append("chaos: missing integer 'seed'")
+    scenarios = doc.get("scenarios")
+    all_passed = True
+    if not isinstance(scenarios, list) or not scenarios:
+        errs.append("chaos: 'scenarios' must be a non-empty list")
+        scenarios = []
+    for i, sc in enumerate(scenarios):
+        where = f"chaos: scenarios[{i}]"
+        if not isinstance(sc, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        if not isinstance(sc.get("name"), str) or not sc["name"]:
+            errs.append(f"{where} needs a string 'name'")
+        if not isinstance(sc.get("passed"), bool):
+            errs.append(f"{where} needs a boolean 'passed'")
+        else:
+            all_passed &= sc["passed"]
+        faults = sc.get("faults")
+        if not isinstance(faults, dict):
+            errs.append(f"{where} needs a 'faults' hit-count object")
+        else:
+            for point, fires in faults.items():
+                if not isinstance(fires, int) or fires < 0:
+                    errs.append(f"{where}.faults[{point}] not a count")
+    classes = doc.get("fault_classes")
+    if not isinstance(classes, dict) or not classes:
+        errs.append("chaos: 'fault_classes' must be a non-empty object")
+        classes = {}
+    for point, fires in classes.items():
+        if not isinstance(fires, int) or fires < 0:
+            errs.append(f"chaos: fault_classes[{point}] not a count")
+    try:
+        from repro.runtime.faults import FAULT_POINTS
+
+        unknown = set(classes) - set(FAULT_POINTS)
+        if unknown:
+            errs.append(f"chaos: unregistered fault classes {sorted(unknown)}")
+        missing = set(FAULT_POINTS) - set(classes)
+        if missing:
+            errs.append(f"chaos: fault classes never exercised "
+                        f"{sorted(missing)}")
+    except ImportError:  # standalone check of a foreign report
+        pass
+    if doc.get("all_classes_hit") is not True:
+        errs.append("chaos: 'all_classes_hit' must be true")
+    elif any(v < 1 for v in classes.values()):
+        errs.append("chaos: all_classes_hit claimed but some class has "
+                    "zero fires")
+    if not isinstance(doc.get("passed"), bool):
+        errs.append("chaos: missing boolean 'passed'")
+    elif doc["passed"] and not all_passed:
+        errs.append("chaos: 'passed' true but a scenario failed")
+    return errs
+
+
 def check_file(path: str) -> list[str]:
     try:
         with open(path) as fh:
@@ -195,6 +264,10 @@ def check_file(path: str) -> list[str]:
             str(doc.get("schema", "")).startswith("repro.tune")
             or doc.get("suite") == "tune"):
         errs = check_tune_doc(doc)
+    elif isinstance(doc, dict) and (
+            str(doc.get("schema", "")).startswith("repro.chaos")
+            or doc.get("suite") == "chaos"):
+        errs = check_chaos_doc(doc)
     else:
         errs = check_metrics_doc(doc)
     return [f"{path}: {e}" for e in errs]

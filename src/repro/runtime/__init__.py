@@ -2,6 +2,14 @@ from .trainer import SimulatedFailure, StragglerMonitor, Trainer, TrainerConfig
 from .server import DecodeServer, Request, splice_cache
 from .scheduler import AsyncServer, Scheduler, SchedulerConfig
 from .prefix_cache import PrefixCache
+from .faults import (
+    FAULT_POINTS,
+    FaultError,
+    FaultPlan,
+    FaultSpec,
+    TransientFault,
+    Watchdog,
+)
 
 __all__ = [
     "SimulatedFailure",
@@ -15,4 +23,10 @@ __all__ = [
     "Scheduler",
     "SchedulerConfig",
     "PrefixCache",
+    "FAULT_POINTS",
+    "FaultError",
+    "FaultPlan",
+    "FaultSpec",
+    "TransientFault",
+    "Watchdog",
 ]

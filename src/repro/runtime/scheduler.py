@@ -39,6 +39,11 @@ if TYPE_CHECKING:  # pragma: no cover
 REJECT_QUEUE_FULL = "queue_full"
 REJECT_EMPTY_PROMPT = "empty_prompt"
 REJECT_PROMPT_TOO_LONG = "prompt_too_long"
+REJECT_SHED = "shed"
+REJECT_DUPLICATE_UID = "duplicate_uid"
+
+# dispatch-interval samples kept for the load-shedding service-rate estimate
+_RATE_WINDOW = 32
 
 
 @dataclasses.dataclass
@@ -48,6 +53,12 @@ class SchedulerConfig:
     aging_rate: float = 1.0         # priority classes gained per second waited
     overflow: str = "reject"        # over-length prompts: "reject" | "truncate"
     max_prompt_tokens: int = 0      # 0 = use the server's max_seq - 1
+    # Load shedding (overload degradation): when True, (a) a full queue
+    # evicts the lowest-priority queued request instead of bouncing a more
+    # urgent newcomer, and (b) a deadline-carrying request whose predicted
+    # queue wait (pending x observed dispatch interval) already exceeds its
+    # deadline is rejected at admission — before any device work is spent.
+    shed: bool = False
 
 
 class Scheduler:
@@ -65,6 +76,8 @@ class Scheduler:
         self.prompt_limit = self.cfg.max_prompt_tokens or prompt_limit
         self._queues: dict[int, deque] = {}
         self._size = 0
+        self._evicted: list = []            # shed victims awaiting retirement
+        self._dispatch_marks: deque = deque(maxlen=_RATE_WINDOW)
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         m = self.metrics
         self._c_submitted = m.counter("sched_submitted", "requests offered")
@@ -80,14 +93,28 @@ class Scheduler:
     # -- admission ---------------------------------------------------------
 
     def admit(self, req: "Request", now: float | None = None) -> tuple[bool, str | None]:
-        """Validate and enqueue.  Returns (admitted, reject_reason)."""
+        """Validate and enqueue.  Returns (admitted, reject_reason).
+
+        With ``cfg.shed``, overload degrades instead of head-dropping: a full
+        queue evicts its least-urgent member when the newcomer is strictly
+        more urgent (victims land in :meth:`drain_evicted` for the owner to
+        retire with a structured reason), and a request whose deadline the
+        pending-queue math already proves unserviceable is shed on the spot.
+        """
+        now = now if now is not None else time.perf_counter()
+        if req.deadline_s is not None and req.deadline_at is None:
+            req.deadline_at = now + req.deadline_s
         self._c_submitted.inc()
         reason = None
         if not req.prompt:
             reason = REJECT_EMPTY_PROMPT
         elif self.cfg.max_queue and self._size >= self.cfg.max_queue:
-            reason = REJECT_QUEUE_FULL
-        elif self.prompt_limit and len(req.prompt) > self.prompt_limit:
+            if not (self.cfg.shed and self._shed_for(req, now)):
+                reason = REJECT_QUEUE_FULL
+        elif self.cfg.shed and self._unserviceable(req, now):
+            reason = REJECT_SHED
+        if reason is None and self.prompt_limit \
+                and len(req.prompt) > self.prompt_limit:
             if self.cfg.overflow == "truncate":
                 req.prompt = req.prompt[: self.prompt_limit]
                 req.truncated = True
@@ -100,11 +127,92 @@ class Scheduler:
             req.finish_reason = f"rejected:{reason}"
             return False, reason
         self._c_admitted.inc()
-        req.submitted_at = now if now is not None else time.perf_counter()
+        req.submitted_at = now
         self._queues.setdefault(int(req.priority), deque()).append(req)
         self._size += 1
         self._g_pending.set(self._size)
         return True, None
+
+    # -- load shedding ------------------------------------------------------
+
+    def service_estimate_s(self) -> float | None:
+        """Observed mean dispatch interval (None until 2+ dispatches)."""
+        marks = self._dispatch_marks
+        if len(marks) < 2:
+            return None
+        return (marks[-1] - marks[0]) / (len(marks) - 1)
+
+    def _unserviceable(self, req: "Request", now: float) -> bool:
+        """pending x deadline math: the newcomer's predicted queue wait
+        (requests ahead x observed dispatch interval) already exceeds its
+        remaining deadline budget — admitting it only wastes device work."""
+        if req.deadline_at is None:
+            return False
+        est = self.service_estimate_s()
+        if est is None:
+            return False
+        predicted_wait = self._size * est
+        return now + predicted_wait > req.deadline_at
+
+    def _shed_for(self, req: "Request", now: float) -> bool:
+        """Queue full: evict the least-urgent queued request iff the
+        newcomer is strictly more urgent (aging-adjusted).  The victim is
+        parked on the evicted list with ``finish_reason='rejected:shed'``;
+        returns True when a slot was made."""
+        victim_cls = max((c for c, q in self._queues.items() if q),
+                         default=None)
+        if victim_cls is None:
+            return False
+        victim = self._queues[victim_cls][-1]   # youngest of the worst class
+        if self._effective(req, now) >= self._effective(victim, now):
+            return False
+        self._queues[victim_cls].pop()
+        self._size -= 1
+        victim.finish_reason = f"rejected:{REJECT_SHED}"
+        self.metrics.counter("sched_rejected", "admission rejections",
+                             reason=REJECT_SHED).inc()
+        self._evicted.append(victim)
+        return True
+
+    def drain_evicted(self) -> list:
+        """Shed victims since the last drain — the owner retires them (with
+        latency stamps) so no request ever silently disappears."""
+        out, self._evicted = self._evicted, []
+        return out
+
+    # -- deadline reaping / cancellation ------------------------------------
+
+    def reap_expired(self, now: float | None = None) -> list:
+        """Remove and return every queued request whose deadline has passed
+        (the owner retires them with ``finish_reason='expired:queue'``)."""
+        now = now if now is not None else time.perf_counter()
+        reaped: list = []
+        for q in self._queues.values():
+            keep = []
+            for r in q:
+                if r.deadline_at is not None and now >= r.deadline_at:
+                    reaped.append(r)
+                else:
+                    keep.append(r)
+            if len(keep) != len(q):
+                q.clear()
+                q.extend(keep)
+        if reaped:
+            self._size -= len(reaped)
+            self._g_pending.set(self._size)
+        return reaped
+
+    def remove(self, uid: int) -> "Request | None":
+        """Pull a queued request by uid (cancellation path); None if the
+        uid is not queued."""
+        for q in self._queues.values():
+            for r in q:
+                if r.uid == uid:
+                    q.remove(r)
+                    self._size -= 1
+                    self._g_pending.set(self._size)
+                    return r
+        return None
 
     # -- dispatch ----------------------------------------------------------
 
@@ -129,6 +237,7 @@ class Scheduler:
         self._g_pending.set(self._size)
         self._c_dispatched.inc()
         self._g_max_wait.set_max(now - req.submitted_at)
+        self._dispatch_marks.append(now)    # service-rate estimate (shed math)
         req.dispatched_at = now
         return req
 
@@ -167,31 +276,68 @@ class AsyncServer:
     unit of device work (≤ one prefill chunk + one decode dispatch), so the
     event loop regains control at a latency bounded by the chunk size rather
     than by the longest prompt in flight.
+
+    Cancellation is first-class: :meth:`cancel` retires an in-flight request
+    with ``finish_reason="cancelled"`` (its slot is reused the same tick),
+    and cancelling the task awaiting ``generate()`` cancels the request in
+    the server too — an abandoned await never keeps burning device work.
     """
 
     def __init__(self, server: "DecodeServer", idle_sleep: float = 0.001):
         self.server = server
         self.idle_sleep = idle_sleep
-        self._futures: dict[int, asyncio.Future] = {}
+        # uid -> (future, the exact Request it awaits).  Keeping the request
+        # lets _collect verify identity, so a *different* request reusing a
+        # retired uid can never resolve a stranger's future.
+        self._futures: dict[int, tuple[asyncio.Future, "Request"]] = {}
         self._drained = 0            # completed-list watermark
         self._driver: asyncio.Task | None = None
 
     def _collect(self) -> None:
         done = self.server.completed
         for req in done[self._drained:]:
-            fut = self._futures.pop(req.uid, None)
-            if fut is not None and not fut.done():
-                fut.set_result(req)
+            pair = self._futures.get(req.uid)
+            if pair is not None and pair[1] is req:
+                self._futures.pop(req.uid)
+                if not pair[0].done():
+                    pair[0].set_result(req)
         self._drained = len(done)
 
     async def generate(self, req: "Request") -> "Request":
+        # Duplicate-uid guard: the old `self._futures[req.uid] = fut`
+        # silently overwrote the first caller's future, which then awaited
+        # forever.  Duplicates now fail fast with a structured reason and
+        # never reach the server.
+        if req.uid in self._futures:
+            now = time.perf_counter()
+            req.submitted_at = req.submitted_at or now
+            req.done_at = req.retired_at = now
+            req.finish_reason = f"rejected:{REJECT_DUPLICATE_UID}"
+            self.server.obs.metrics.counter(
+                "requests_completed", "retired requests by finish reason",
+                reason="rejected").inc()
+            return req
         fut = asyncio.get_running_loop().create_future()
-        self._futures[req.uid] = fut
+        self._futures[req.uid] = (fut, req)
         self.server.submit(req)
         self._collect()              # instant rejection resolves immediately
         if self._driver is None or self._driver.done():
             self._driver = asyncio.ensure_future(self._drive())
-        return await fut
+        try:
+            return await fut
+        except asyncio.CancelledError:
+            # awaiting-task cancellation propagates into the server: free
+            # the slot/queue entry now instead of decoding to max_tokens
+            self.cancel(req.uid)
+            raise
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel an in-flight request by uid.  Returns True if found; the
+        awaiting ``generate()`` resolves with the retired request
+        (``finish_reason="cancelled"``)."""
+        found = self.server.cancel(uid)
+        self._collect()
+        return found
 
     async def _drive(self) -> None:
         try:
@@ -202,7 +348,7 @@ class AsyncServer:
         except BaseException as exc:
             # fail every pending generate() — a dead driver must never leave
             # callers awaiting forever on an unobserved exception
-            for fut in self._futures.values():
+            for fut, _req in self._futures.values():
                 if not fut.done():
                     fut.set_exception(exc)
             self._futures.clear()

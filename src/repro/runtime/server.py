@@ -52,8 +52,10 @@ from repro import obs as obs_lib
 from repro.models import lm
 from repro.models.config import ModelConfig
 
+from . import faults as faults_lib
+from .faults import TransientFault, Watchdog
 from .prefix_cache import PrefixCache
-from .scheduler import Scheduler, SchedulerConfig
+from .scheduler import REJECT_DUPLICATE_UID, Scheduler, SchedulerConfig
 
 PyTree = Any
 
@@ -120,11 +122,19 @@ class Request:
     max_new_tokens: int = 16
     temperature: float = 0.0   # 0 = greedy
     priority: int = 1          # scheduler class; smaller = more urgent
+    # TTL budget in seconds from submission (None = no deadline).  Honored
+    # at admission (deadline_s <= 0 expires on the spot), in queue, and
+    # mid-decode: expired requests retire with finish_reason
+    # "expired:queue" (never dispatched) or "expired:decode" (a slot was
+    # committed), and their slots are reused the same tick.
+    deadline_s: float | None = None
+    deadline_at: float | None = None     # absolute (stamped at submit)
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     submitted_at: float = 0.0
     dispatched_at: float | None = None   # popped from the queue (slot found)
     first_token_at: float | None = None
     done_at: float | None = None
+    retired_at: float | None = None      # == done_at; every path stamps it
     finish_reason: str | None = None
     truncated: bool = False     # prompt cut to the admission limit
     prefix_hit_tokens: int = 0  # prompt steps served from the prefix cache
@@ -150,7 +160,9 @@ class DecodeServer:
                  scheduler: Scheduler | SchedulerConfig | None = None,
                  prefill_chunks_per_tick: int = 1,
                  prefill_adaptive: bool = False,
-                 obs: obs_lib.Observability | None = None):
+                 obs: obs_lib.Observability | None = None,
+                 faults: "faults_lib.FaultPlan | None" = None,
+                 watchdog_s: float | None = None):
         self.cfg, self.params = cfg, params
         self.B, self.S = num_slots, max_seq
         self.eos_id = eos_id
@@ -184,11 +196,20 @@ class DecodeServer:
         else:
             self.scheduler = Scheduler(scheduler, prompt_limit=max_seq - 1,
                                        metrics=self.obs.metrics)
+        # Robustness layer (README §Robustness): an explicit FaultPlan wins;
+        # otherwise the ambient plan installed via repro.runtime.faults is
+        # consulted *per fire* so tests can arm/disarm around a live server.
+        # With no plan anywhere, every fault check is a single `is None`.
+        self.faults = faults
+        self._watch = Watchdog(watchdog_s) if watchdog_s else None
+        self._last_work = 0                 # progress marker for the watchdog
         self.caches = lm.init_cache(cfg, num_slots, max_seq)
         self.pos = np.zeros(num_slots, np.int32)        # next write position
         self.live = np.zeros(num_slots, bool)
         self.reserved = np.zeros(num_slots, bool)       # prefill job in flight
+        self.quarantined = np.zeros(num_slots, bool)    # awaiting state scrub
         self.slot_req: list[Request | None] = [None] * num_slots
+        self._inflight: dict[int, Request] = {}         # uid -> admitted req
         self.cur_tokens = np.zeros(num_slots, np.int32)
         self.completed: list[Request] = []
         self.key = jax.random.PRNGKey(seed)
@@ -224,7 +245,17 @@ class DecodeServer:
         self._m_live = m.gauge("live_slots", "slots decoding")
         self._h_ttft = m.histogram("ttft_ms", "submit -> first token")
         self._h_tpot = m.histogram("tpot_ms", "per-token decode latency")
-        self._h_queue = m.histogram("queue_wait_ms", "submit -> dispatch")
+        self._h_queue = m.histogram("queue_wait_ms",
+                                    "submit -> dispatch (or terminal event "
+                                    "for requests that never dispatched)")
+        # robustness telemetry
+        self._m_quar = m.counter("slots_quarantined",
+                                 "slots retired on non-finite state")
+        self._m_disp_retries = m.counter(
+            "decode_dispatch_retries",
+            "decode ticks aborted on a transient dispatch error")
+        self._m_stalled = m.counter(
+            "server_stalled", "watchdog firings (no progress in bound)")
         self._tick_prompt_steps = 0
         self._tick_uncontended = True       # no slot is live before tick 0
 
@@ -260,23 +291,44 @@ class DecodeServer:
 
     def submit(self, req: Request) -> bool:
         """Admission-controlled enqueue.  Rejected requests complete
-        immediately with ``finish_reason='rejected:<reason>'``."""
+        immediately with ``finish_reason='rejected:<reason>'`` and expired
+        ones with ``'expired:queue'`` — every path gets latency stamps."""
         now = time.perf_counter()
         req.submitted_at = now
+        if req.deadline_s is not None:
+            req.deadline_at = now + req.deadline_s
+            if req.deadline_s <= 0:   # dead on arrival: expire before admit
+                self._retire(req, now, "expired:queue")
+                return False
+        if req.uid in self._inflight:
+            # duplicate uid among queued/prefilling/decoding requests: the
+            # first holder keeps its identity; the duplicate fails fast
+            req.finish_reason = f"rejected:{REJECT_DUPLICATE_UID}"
+            self.obs.metrics.counter("sched_rejected", "admission rejections",
+                                     reason=REJECT_DUPLICATE_UID).inc()
+            self._retire(req, now, req.finish_reason)
+            return False
         admitted, _reason = self.scheduler.admit(req, now=now)
+        for victim in self.scheduler.drain_evicted():
+            self._retire(victim, now, victim.finish_reason)
         if not admitted:
             self._retire(req, now, req.finish_reason)
+        else:
+            self._inflight[req.uid] = req
         return admitted
 
     def _free_slot(self) -> int | None:
         for b in range(self.B):
-            if not self.live[b] and not self.reserved[b]:
+            if not self.live[b] and not self.reserved[b] \
+                    and not self.quarantined[b]:
                 return b
         return None
 
     def _retire(self, req: Request, now: float, reason: str) -> None:
-        req.done_at = now
+        req.done_at = req.retired_at = now
         req.finish_reason = req.finish_reason or reason
+        if self._inflight.get(req.uid) is req:
+            del self._inflight[req.uid]
         self.completed.append(req)
         self._observe_retire(req, now)
 
@@ -299,6 +351,11 @@ class DecodeServer:
                     (req.done_at - req.first_token_at) / (n_out - 1) * 1e3)
         if req.dispatched_at is not None:
             self._h_queue.observe((req.dispatched_at - req.submitted_at) * 1e3)
+        elif req.submitted_at:
+            # rejected / expired-in-queue: the failure path still lands in
+            # the queue-wait histogram (time queued before the terminal
+            # event) so the obs latency view never silently skips failures
+            self._h_queue.observe((now - req.submitted_at) * 1e3)
         tr = self._tr
         if not tr.enabled:
             return
@@ -321,6 +378,190 @@ class DecodeServer:
                         tid=tid)
             tr.complete("decode", t_first, t_done - t_first, cat="request",
                         tid=tid, args={"tokens": n_out})
+
+    # ------------------------------------------------------------------
+    # robustness: fault points, quarantine, deadlines, cancellation
+    # ------------------------------------------------------------------
+
+    def _fire(self, point: str):
+        """Consult the server's (or ambient) fault plan at ``point``.  One
+        ``is None`` check when no plan is installed."""
+        spec = faults_lib.fire(point, self.faults)
+        if spec is not None:
+            self.obs.metrics.counter("faults_injected", "injected faults",
+                                     point=point).inc()
+        return spec
+
+    def _fault_slot(self, spec) -> int | None:
+        """Deterministically pick the poisoned slot: the rule's payload may
+        pin ``slot=``; otherwise the point's seeded RNG chooses among the
+        live slots (replayable for a fixed workload)."""
+        if "slot" in spec.payload:
+            b = int(spec.payload["slot"])
+            return b if self.live[b] else None
+        live = [b for b in range(self.B) if self.live[b]]
+        if not live:
+            return None
+        plan = self.faults if self.faults is not None else faults_lib.get_plan()
+        return plan.rng(spec.point).choice(live)
+
+    def _poison_slot(self, b: int, mode: str = "nan") -> None:
+        """Write NaN/Inf into slot ``b``'s cache state (batch axis 1 == B
+        leaves only) — the injected effect of the carry/splice fault points.
+        Other slots' rows are untouched, so survivors stay bit-identical."""
+        bad = float("nan") if mode == "nan" else float("inf")
+
+        def one(leaf):
+            if hasattr(leaf, "ndim") and leaf.ndim >= 2 \
+                    and leaf.shape[1] == self.B \
+                    and jnp.issubdtype(leaf.dtype, jnp.floating):
+                return leaf.at[:, b].set(bad)
+            return leaf
+
+        self.caches = jax.tree_util.tree_map(one, self.caches)
+
+    def _scrub_slot(self, b: int) -> None:
+        """Zero slot ``b``'s cache rows — quarantined state must never leak
+        into the next request admitted to the slot."""
+
+        def one(leaf):
+            if hasattr(leaf, "ndim") and leaf.ndim >= 2 \
+                    and leaf.shape[1] == self.B:
+                return leaf.at[:, b].set(jnp.zeros((), leaf.dtype))
+            return leaf
+
+        self.caches = jax.tree_util.tree_map(one, self.caches)
+
+    def _quarantine(self, b: int, now: float) -> None:
+        """Retire slot ``b``'s request with ``error:nonfinite`` and pull the
+        slot from service until its state is scrubbed (start of next tick).
+        Only this slot is touched: the batch stays live and survivors'
+        token streams are bit-identical to an uninjected run."""
+        req = self.slot_req[b]
+        if req is not None:
+            self._retire(req, now, "error:nonfinite")
+        self.slot_req[b] = None
+        self.live[b] = False
+        self.quarantined[b] = True
+        self._m_quar.inc()
+
+    def _scrub_quarantined(self) -> None:
+        for b in range(self.B):
+            if self.quarantined[b]:
+                self._scrub_slot(b)
+                self.quarantined[b] = False
+
+    def _reap_deadlines(self, now: float) -> None:
+        """Retire every expired request — queued (``expired:queue``), mid-
+        prefill, or mid-decode (``expired:decode``).  Runs at the head of
+        the tick, so freed slots are re-admitted the same tick."""
+        for req in self.scheduler.reap_expired(now):
+            self._retire(req, now, "expired:queue")
+        for job in [j for j in self._jobs
+                    if j.req.deadline_at is not None
+                    and now >= j.req.deadline_at]:
+            self._jobs.remove(job)
+            self.reserved[job.slot] = False
+            self._retire(job.req, now, "expired:decode")
+        for b in range(self.B):
+            req = self.slot_req[b]
+            if req is not None and self.live[b] \
+                    and req.deadline_at is not None \
+                    and now >= req.deadline_at:
+                self._retire(req, now, "expired:decode")
+                self.live[b] = False
+                self.slot_req[b] = None
+
+    def cancel(self, uid: int) -> bool:
+        """Cancel a request anywhere in flight (queued, prefilling, or
+        decoding).  Retires it with ``finish_reason="cancelled"``; the freed
+        slot is reused at the next tick's admission pass."""
+        now = time.perf_counter()
+        req = self.scheduler.remove(uid)
+        if req is not None:
+            self._retire(req, now, "cancelled")
+            return True
+        for job in self._jobs:
+            if job.req.uid == uid:
+                self._jobs.remove(job)
+                self.reserved[job.slot] = False
+                self._retire(job.req, now, "cancelled")
+                return True
+        for b in range(self.B):
+            req = self.slot_req[b]
+            if req is not None and req.uid == uid:
+                self._retire(req, now, "cancelled")
+                self.live[b] = False
+                self.slot_req[b] = None
+                return True
+        return False
+
+    def _abort_inflight(self, reason: str, now: float) -> None:
+        """Structured abort: every in-flight request retires with
+        ``reason`` (stall recovery — nothing awaits forever, nothing
+        silently disappears)."""
+        while True:
+            req = self.scheduler.next_request(now=now)
+            if req is None:
+                break
+            self._retire(req, now, reason)
+        for job in list(self._jobs):
+            self.reserved[job.slot] = False
+            self._retire(job.req, now, reason)
+        self._jobs.clear()
+        for b in range(self.B):
+            req = self.slot_req[b]
+            if req is not None:
+                self._retire(req, now, reason)
+                self.live[b] = False
+                self.slot_req[b] = None
+
+    def _watchdog_check(self) -> None:
+        """Fire the stall watchdog when work is in flight but no tick has
+        made progress (tokens decoded, prompt steps run, or requests
+        retired) within the wall-clock bound."""
+        if self._watch is None:
+            return
+        now = time.perf_counter()
+        work = (self.decoded_tokens + self.prompt_steps_computed
+                + len(self.completed))
+        if work != self._last_work:
+            self._last_work = work
+            self._watch.progress(now)
+            return
+        pending = bool(self.live.any() or self._jobs or len(self.scheduler))
+        if pending and self._watch.stalled(now):
+            self._m_stalled.inc()
+            self._watch.fired += 1
+            self._abort_inflight("error:stalled", now)
+            self._watch.progress(now)
+
+    def health(self) -> dict:
+        """Readiness/liveness snapshot (also exported under
+        ``stats()["health"]`` and by ``launch/serve.py``)."""
+        stalled = int(self._m_stalled.value)
+        quarantined = int(self.quarantined.sum())
+        shed = int(self.obs.metrics.value("sched_rejected", reason="shed"))
+        status = "stalled" if stalled else (
+            "degraded" if quarantined or shed
+            or int(self._m_quar.value) else "ok")
+        out = {
+            "status": status,
+            "live_slots": int(self.live.sum()),
+            "reserved_slots": int(self.reserved.sum()),
+            "quarantined_slots": quarantined,
+            "queued": len(self.scheduler),
+            "slots_quarantined_total": int(self._m_quar.value),
+            "dispatch_retries": int(self._m_disp_retries.value),
+            "stalled_events": stalled,
+            "watchdog_s": self._watch.bound_s if self._watch else None,
+            "last_progress_idle_s":
+                self._watch.idle_s() if self._watch else None,
+        }
+        plan = self.faults if self.faults is not None else faults_lib.get_plan()
+        if plan is not None:
+            out["faults"] = plan.report()
+        return out
 
     def _start_request(self, req: Request, b: int, first_logits: np.ndarray) -> None:
         """Go live after the prompt state is in slot ``b`` — or retire at
@@ -415,6 +656,11 @@ class DecodeServer:
                 if full is not None:
                     self.caches = splice_cache(self.caches, full.caches, b,
                                                plen, self.S)
+                    spec = self._fire("prefix.splice")
+                    if spec is not None:
+                        # corrupted checkpoint splice: caught downstream by
+                        # the per-slot non-finite detection, not here
+                        self._poison_slot(b, spec.mode)
                     req.prefix_hit_tokens = plen
                     self.prefix_cache.record_hit(plen, full=True)
                     self._start_request(req, b, np.asarray(full.logits))
@@ -514,6 +760,13 @@ class DecodeServer:
 
     def _begin_tick(self) -> None:
         self._tick_prompt_steps = 0
+        spec = self._fire("tick.slow")
+        if spec is not None and spec.delay_s > 0:
+            time.sleep(spec.delay_s)
+        # scrub quarantined slots (deferred device work) and reap expired
+        # requests BEFORE admission — freed slots are reused this same tick
+        self._scrub_quarantined()
+        self._reap_deadlines(time.perf_counter())
         # contention is a tick-level property, captured before admissions:
         # a slot is "live" here iff it was decoding when the tick began —
         # requests started later this tick never stalled on this tick's
@@ -536,19 +789,48 @@ class DecodeServer:
         self._begin_tick()
         if not self.live.any():
             return 0
+        spec = self._fire("decode.nan_carry")
+        if spec is not None:
+            b = self._fault_slot(spec)
+            if b is not None:
+                self._poison_slot(b, spec.mode)
         with self._tr.span("decode_step", cat="decode",
                            args={"live": int(self.live.sum())}):
             toks = jnp.asarray(self.cur_tokens[:, None])
-            logits, self.caches = self._decode(
-                self.params, toks, self.caches, jnp.asarray(self.pos)
-            )
+            try:
+                if self._fire("decode.dispatch") is not None:
+                    raise TransientFault("injected decode.dispatch fault")
+                logits, self.caches = self._decode(
+                    self.params, toks, self.caches, jnp.asarray(self.pos)
+                )
+            except TransientFault:
+                # transient dispatch error: abort the tick, retry next tick
+                # (state untouched).  A tiny backoff keeps a permanently
+                # failing dispatch from spinning the host; the watchdog
+                # bounds the livelock.
+                self._m_disp_retries.inc()
+                time.sleep(0.001)
+                return int(self.live.sum())
             with self._tr.span("device_sync", cat="sync"):
                 logits = np.asarray(logits)
         self._m_syncs.inc()
         self.pos += self.live.astype(np.int32)
         now = time.perf_counter()
+        spec = self._fire("decode.nan_logits")
+        if spec is not None:
+            b = self._fault_slot(spec)
+            if b is not None:
+                logits = logits.copy()
+                logits[b] = (np.nan if spec.mode == "nan" else np.inf)
+        # per-slot non-finite detection: poison (injected or real — an
+        # overflowed carry, a bad checkpoint splice) quarantines ONLY the
+        # affected slot; the rest of the batch proceeds bit-identically
+        finite = np.isfinite(logits).all(axis=-1)
         for b in range(self.B):
             if not self.live[b]:
+                continue
+            if not finite[b]:
+                self._quarantine(b, now)
                 continue
             req = self.slot_req[b]
             if req.temperature > 0:
@@ -608,8 +890,13 @@ class DecodeServer:
                 done_now = live & ((remaining <= 0) | (nxt == eos)
                                    | (pos >= S - 1))
                 live = live & ~done_now
+                # per-slot health: one all-reduce over the logits per tick
+                # (negligible vs the gate contractions) so the host can
+                # quarantine poisoned slots at the block boundary without
+                # syncing the caches back
+                finite = jnp.isfinite(logits).all(axis=-1)
                 return (caches, nxt, pos, live, remaining, key), \
-                    (nxt, emitted, done_now)
+                    (nxt, emitted, done_now, finite)
 
             carry0 = (caches, cur, pos, live, remaining, key)
             carry, outs = jax.lax.scan(tick, carry0, None, length=k)
@@ -632,6 +919,13 @@ class DecodeServer:
         self._begin_tick()
         if not self.live.any():
             return 0
+        spec = self._fire("decode.nan_carry") or self._fire("decode.nan_logits")
+        if spec is not None:
+            # the persistent driver samples on device, so both poison points
+            # inject into the carry — the in-block finite check catches it
+            b = self._fault_slot(spec)
+            if b is not None:
+                self._poison_slot(b, spec.mode)
         k = self.block_k
         fn = self._block_fns.get(k)
         if fn is None:
@@ -644,22 +938,41 @@ class DecodeServer:
              for r in self.slot_req], np.int32)
         with self._tr.span("decode_block", cat="decode",
                            args={"live": int(self.live.sum()), "k": k}):
-            carry, (toks, emitted, done_now) = fn(
-                self.params, self.caches, jnp.asarray(self.cur_tokens),
-                jnp.asarray(self.pos), jnp.asarray(self.live),
-                jnp.asarray(remaining), jnp.asarray(temps), self.key,
-            )
+            try:
+                if self._fire("decode.dispatch") is not None:
+                    raise TransientFault("injected decode.dispatch fault")
+                carry, (toks, emitted, done_now, finite) = fn(
+                    self.params, self.caches, jnp.asarray(self.cur_tokens),
+                    jnp.asarray(self.pos), jnp.asarray(self.live),
+                    jnp.asarray(remaining), jnp.asarray(temps), self.key,
+                )
+            except TransientFault:
+                self._m_disp_retries.inc()
+                time.sleep(0.001)
+                return int(self.live.sum())
             self.caches, cur, pos, live, _, self.key = carry
             # ONE sync: the K×B block (plus the small carry vectors) to host.
             with self._tr.span("device_sync", cat="sync"):
                 toks = np.asarray(toks)
-                emitted = np.asarray(emitted)
-                done_now = np.asarray(done_now)
+                emitted = np.array(emitted)      # writable: the quarantine
+                done_now = np.array(done_now)    # pass masks bad ticks
+                finite = np.asarray(finite)
                 self.cur_tokens = np.array(cur)   # np.array copies: the host
                 self.pos = np.array(pos)          # mirrors stay writable for
                 self.live = np.array(live)        # _admit()
         self._m_syncs.inc()
         now = time.perf_counter()
+        # quarantine pass: a slot that went non-finite at inner tick t
+        # produced garbage from t on — drop those emissions (and any bogus
+        # device-side retirement) and retire the slot as error:nonfinite
+        quarantine: list[int] = []
+        for b in range(self.B):
+            bad = emitted[:, b] & ~finite[:, b]
+            if bad.any():
+                tb = int(np.argmax(bad))
+                emitted[tb:, b] = False
+                done_now[tb:, b] = False
+                quarantine.append(b)
         for t in range(k):
             for b in range(self.B):
                 if not emitted[t, b]:
@@ -678,6 +991,8 @@ class DecodeServer:
                                else "out_of_cache"))
                     self._retire(req, now, reason)
                     self.slot_req[b] = None
+        for b in quarantine:
+            self._quarantine(b, now)
         return int(self.live.sum())
 
     # ------------------------------------------------------------------
@@ -688,6 +1003,7 @@ class DecodeServer:
             self.step_block()
         else:
             self.step()
+        self._watchdog_check()
         return bool(self.live.any() or self._jobs or len(self.scheduler))
 
     def stats(self, reset: bool = False) -> dict:
@@ -721,6 +1037,7 @@ class DecodeServer:
                 "queue_wait_ms": self._h_queue.summary(),
             },
             "scheduler": self.scheduler.telemetry(),
+            "health": self.health(),
         }
         if self.prefix_cache is not None:
             out["prefix_cache"] = self.prefix_cache.telemetry()
@@ -746,5 +1063,6 @@ class DecodeServer:
         while (len(self.scheduler) or self._jobs or self.live.any()) \
                 and ticks < max_ticks:
             step()
+            self._watchdog_check()
             ticks += 1
         return self.completed

@@ -7,7 +7,10 @@ The contract this package enforces (README "Verification"):
   backend, and the generated Pallas kernel (interpret mode) — agree to
   ≤ 1e-5 on every generated spec;
 * the bit-accurate RTL simulator (``repro.codegen.rtlsim``) is **bit-exact**
-  against the independent fixed-point golden model here, word for word.
+  against the independent fixed-point golden model here, word for word;
+* the seeded chaos suite (``python -m repro.verify.chaos``) injects every
+  registered fault class and verifies containment (structured finish
+  reasons, bit-identical survivors, bounded stalls).
 """
 
 from .golden import fixed_forward

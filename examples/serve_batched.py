@@ -53,6 +53,16 @@ def main() -> None:
                     help="scheduler load shedding: reject the lowest-"
                          "priority class when deadline math says the queue "
                          "is unserviceable")
+    ap.add_argument("--mesh", default=None, metavar="DPxTP",
+                    help="shard the server over a device mesh (e.g. 8x1: "
+                         "slot pools over the data axis, gate contractions "
+                         "over model); needs dp*tp devices, e.g. "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8")
+    ap.add_argument("--mesh-layout", choices=["sharded", "folded"],
+                    default="sharded",
+                    help="'sharded' partitions slots across devices; "
+                         "'folded' decodes all shards through one fused "
+                         "dispatch (single-host C-slow composition)")
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
@@ -71,13 +81,23 @@ def main() -> None:
         params = dequantize_lm_params(qp)  # W8A16: dense compute, int8 storage
     from repro.runtime import SchedulerConfig
 
+    plan = None
+    if args.mesh:
+        from repro.launch.mesh import make_local_mesh
+        from repro.runtime import ShardPlan
+
+        dp, tp = (int(x) for x in args.mesh.lower().split("x"))
+        plan = ShardPlan(make_local_mesh(dp=dp, tp=tp),
+                         fold_data=args.mesh_layout == "folded")
+        print(f"mesh: {plan.describe()}")
+
     server = DecodeServer(cfg, params, num_slots=args.slots, max_seq=args.max_seq,
                           block_k=args.block_k, persistent=args.persistent,
                           prefill_chunk=args.prefill_chunk,
                           prefix_cache_bytes=args.prefix_cache << 20,
                           scheduler=SchedulerConfig(policy=args.scheduler,
                                                     shed=args.shed),
-                          watchdog_s=args.watchdog_s)
+                          watchdog_s=args.watchdog_s, plan=plan)
 
     rng = np.random.default_rng(0)
     t0 = time.perf_counter()
@@ -113,6 +133,11 @@ def main() -> None:
     if served:
         print(f"TTFT   p50={np.percentile(ttfts, 50)*1e3:.0f}ms p95={np.percentile(ttfts, 95)*1e3:.0f}ms")
         print(f"E2E    p50={np.percentile(lats, 50)*1e3:.0f}ms p95={np.percentile(lats, 95)*1e3:.0f}ms")
+    if plan is not None:
+        mesh_stats = stats["mesh"]
+        print(f"mesh dp={mesh_stats['dp']} tp={mesh_stats['tp']} "
+              f"layout={mesh_stats['layout']}: tokens/shard="
+              f"{mesh_stats['decoded_tokens_by_shard']}")
     health = stats["health"]
     print(f"health: {health['status']} (quarantined={health['quarantined_slots']}, "
           f"stalled_events={health['stalled_events']})")

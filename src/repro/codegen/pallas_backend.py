@@ -404,7 +404,7 @@ def compile_program(program: Program, *, lut=None,
                     chunk: int = DEFAULT_CHUNK, block_b: int = DEFAULT_BLOCK_B,
                     interpret: bool | None = None,
                     quant_bits: int | None = None,
-                    double_buffer: bool = True) -> Callable:
+                    double_buffer: bool = True, mesh=None) -> Callable:
     """IR → batched forward through generated fused kernels — the same
     signature as :func:`xla_backend.compile_program`.
 
@@ -415,6 +415,13 @@ def compile_program(program: Program, *, lut=None,
     vmap-of-scans.  ``quant_bits <= 8`` runs every gate contraction on the
     weight-only int8 ROM path (see :func:`compile_stage` /
     :func:`prequantize_consts`).
+
+    With ``mesh`` the forward runs under ``shard_map`` over the mesh's DP
+    axes: the leading (stream/batch) axis splits across data shards and
+    each shard folds its LOCAL streams into its own kernel grid —
+    ``c_slow × data_shards`` compose on the same batch dimension (ROM
+    double-buffering stays per-device; params replicate).  A leading axis
+    that doesn't divide the DP size falls back to the single-device path.
     """
     from repro.core.cslow import fold_streams, unfold_streams
 
@@ -451,4 +458,25 @@ def compile_program(program: Program, *, lut=None,
             y = unfold_streams(y, C_streams)
         return y
 
-    return forward
+    if mesh is None:
+        return forward
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel._compat import shard_map
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    if dp_n <= 1:
+        return forward
+
+    def sharded_forward(params: PyTree, u: jnp.ndarray) -> jnp.ndarray:
+        u = jnp.asarray(u, jnp.float32)
+        if u.shape[0] % dp_n:
+            return forward(params, u)      # ragged leading axis: one device
+        sm = shard_map(forward, mesh=mesh, in_specs=(P(), P(dp)),
+                       out_specs=P(dp), check_rep=False)
+        return sm(params, u)
+
+    return sharded_forward

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.cslow import cslow_vectorized
@@ -19,6 +20,59 @@ from repro.core.state_space import StateSpaceModel, resolve_activation, run_scan
 from .ir import DatapathGraph, Program, Stage, eval_graph
 
 PyTree = Any
+
+
+def _mesh_constraints(program: Program, mesh):
+    """GSPMD pins for the mesh-aware program (README §Sharded serving).
+
+    Returns ``(pin_u, pin_stage)``:
+
+    * ``pin_u`` shards the leading (batch / C-slow stream) axis of the input
+      over the DP axes — the C-slow interleave and the data axis compose on
+      the same dimension.
+    * ``pin_stage`` row-parallels every MACC weight ROM over ``"model"``:
+      the contraction (input-feature) dim of the ``[D+H, 4H]`` gate weight
+      is split across TP ranks, so GSPMD places the all-reduce exactly at
+      the gate-nonlinearity boundary (each rank computes a partial gate
+      pre-activation).  Stacked per-step ROMs ``[N, M, M]`` pin dim 1.
+
+    Every pin is divisibility-guarded; an axis that doesn't divide leaves
+    the tensor unconstrained (replicated), never mis-sharded.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_n = 1
+    for a in dp:
+        dp_n *= mesh.shape[a]
+    tp_n = mesh.shape.get("model", 1)
+    w_names = [{n.inputs[1] for n in st.graph.macc_nodes()}
+               for st in program.stages]
+
+    def pin_u(u):
+        if dp_n > 1 and u.shape[0] % dp_n == 0:
+            spec = P(*([dp] + [None] * (u.ndim - 1)))
+            return jax.lax.with_sharding_constraint(
+                u, NamedSharding(mesh, spec))
+        return u
+
+    def pin_w(w):
+        if tp_n <= 1 or not hasattr(w, "ndim"):
+            return w
+        if w.ndim == 2 and w.shape[0] % tp_n == 0:
+            return jax.lax.with_sharding_constraint(
+                w, NamedSharding(mesh, P("model", None)))
+        if w.ndim == 3 and w.shape[1] % tp_n == 0:    # stacked per-step ROMs
+            return jax.lax.with_sharding_constraint(
+                w, NamedSharding(mesh, P(None, "model", None)))
+        return w
+
+    def pin_stage(i, consts):
+        names = w_names[i]
+        return {k: (pin_w(jnp.asarray(v, jnp.float32)) if k in names else v)
+                for k, v in consts.items()}
+
+    return pin_u, pin_stage
 
 
 def graph_model(graph: DatapathGraph, shared: dict[str, jnp.ndarray]) -> StateSpaceModel:
@@ -83,21 +137,32 @@ def compile_stage(stage: Stage) -> Callable:
     return run
 
 
-def compile_program(program: Program) -> Callable:
+def compile_program(program: Program, mesh=None) -> Callable:
     """IR → batched forward: ``forward(params, u) -> y``.
 
     Shapes (B = batch; with ``c_slow = C > 1`` prepend a stream axis C):
       mlp        u [B, L]     -> y [B, P]
       recurrent  u [B, T, D]  -> y [B, P]   (readout of the final carry)
+
+    With ``mesh`` the forward carries GSPMD sharding constraints: input
+    batch/stream axis over the DP axes, MACC weight ROMs row-parallel over
+    ``"model"`` (see :func:`_mesh_constraints`).  mesh=None compiles the
+    identical single-device program as before.
     """
     program.validate()
     runners = [compile_stage(st) for st in program.stages]
     is_mlp = program.beta is not None
     readout = program.readout_state
+    pin_u = pin_stage = None
+    if mesh is not None:
+        pin_u, pin_stage = _mesh_constraints(program, mesh)
 
     def forward(params: PyTree, u: jnp.ndarray) -> jnp.ndarray:
         C = jnp.asarray(params["C"], jnp.float32)
         sp = params["stages"]
+        if pin_stage is not None:
+            u = pin_u(jnp.asarray(u, jnp.float32))
+            sp = [pin_stage(i, p) for i, p in enumerate(sp)]
         if is_mlp:
             x0 = {"x": jnp.asarray(u, jnp.float32) @ jnp.asarray(params["beta"], jnp.float32).T}
             finals, _ = runners[0](sp[0], x0, None)

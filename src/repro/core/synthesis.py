@@ -222,7 +222,7 @@ _SYNTH_CACHE: dict[tuple, SynthesisReport] = {}
 
 def _cache_key(spec: NetworkSpec, batch: int | None, backend: str,
                double_buffer: bool, chunk: int | None = None,
-               block_b: int | None = None) -> tuple:
+               block_b: int | None = None, mesh=None) -> tuple:
     """EVERY knob that changes the compiled artifact must appear here.
 
     ``spec`` is a frozen dataclass, so its hash covers the shape knobs AND
@@ -231,11 +231,18 @@ def _cache_key(spec: NetworkSpec, batch: int | None, backend: str,
     function of key fields, so it cannot alias).  ``double_buffer`` /
     ``chunk`` / ``block_b`` only exist on the pallas backend; normalize
     them for the others so an xla/verilog call can't fork the cache on an
-    irrelevant flag.
+    irrelevant flag.  ``mesh`` keys by the ShardPlan identity (axis names +
+    shape + device ids) on the backends that consume it — two different
+    meshes never alias, and mesh is normalized away where it has no effect.
     """
     if backend != "pallas":
         double_buffer, chunk, block_b = True, None, None
-    return (spec, batch, backend, double_buffer, chunk, block_b)
+    mesh_key = None
+    if mesh is not None and backend in ("xla", "pallas"):
+        from repro.runtime.shard_plan import ShardPlan
+
+        mesh_key = ShardPlan(mesh).key()
+    return (spec, batch, backend, double_buffer, chunk, block_b, mesh_key)
 
 
 def synthesize_cache_clear() -> None:
@@ -290,7 +297,7 @@ def _quant_analysis(spec: NetworkSpec, backend: str, prog) -> dict | None:
 
 def _ledger_key(spec: NetworkSpec, batch: int | None, backend: str,
                 double_buffer: bool = True, chunk: int | None = None,
-                block_b: int | None = None) -> str:
+                block_b: int | None = None, mesh=None) -> str:
     """Program id in the predicted-vs-measured ledger: one row per distinct
     compiled artifact the Fig. 10 loop could rank.  Non-default pallas
     tiling knobs get their own tags so tuner candidates never collide."""
@@ -306,6 +313,11 @@ def _ledger_key(spec: NetworkSpec, batch: int | None, backend: str,
             key += f"|ch{chunk}"
         if block_b is not None:
             key += f"|bb{block_b}"
+    if mesh is not None and backend in ("xla", "pallas"):
+        from repro.runtime.shard_plan import ShardPlan
+
+        plan = ShardPlan(mesh)
+        key += f"|mesh{plan.dp}x{plan.tp}"
     return key
 
 
@@ -384,9 +396,12 @@ def _is_transient(exc: BaseException) -> bool:
 
 
 def _build_fwd(program, spec: NetworkSpec, backend: str, quant: dict | None,
-               double_buffer: bool, chunk: int | None, block_b: int | None):
+               double_buffer: bool, chunk: int | None, block_b: int | None,
+               mesh=None):
     """One backend's (fwd, params) — the compile target for the retry /
-    fallback loop in :func:`synthesize`."""
+    fallback loop in :func:`synthesize`.  ``mesh`` threads the device mesh
+    into the xla (GSPMD TP/DP constraints) and pallas (shard_map over DP)
+    backends; "ref" and "verilog" ignore it."""
     from repro import codegen
 
     m = _faults_mod()
@@ -413,7 +428,8 @@ def _build_fwd(program, spec: NetworkSpec, backend: str, quant: dict | None,
             program, lut=lut, quant_bits=int8_bits,
             double_buffer=double_buffer,
             chunk=chunk if chunk is not None else pb.DEFAULT_CHUNK,
-            block_b=block_b if block_b is not None else pb.DEFAULT_BLOCK_B)
+            block_b=block_b if block_b is not None else pb.DEFAULT_BLOCK_B,
+            mesh=mesh)
         if int8_bits is not None:
             # pack the int8 weight ROM pages ONCE, here at synthesis time —
             # the kernel then streams 1/4-size pages through the double
@@ -425,11 +441,13 @@ def _build_fwd(program, spec: NetworkSpec, backend: str, quant: dict | None,
                 for st, sp in zip(program.stages, params["stages"])]
         return fwd, params
     # "xla" and the verilog cross-check both compile the XLA program
-    return codegen.xla_backend.compile_program(program), params
+    xmesh = mesh if backend == "xla" else None
+    return codegen.xla_backend.compile_program(program, mesh=xmesh), params
 
 
 def synthesize(spec: NetworkSpec, batch: int | None = None,
                backend: str = "xla", *,
+               mesh=None,
                double_buffer: bool = True,
                chunk: int | None = None,
                block_b: int | None = None,
@@ -448,6 +466,14 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     ``double_buffer`` forwards to the pallas backend (2-slot ROM prefetch
     vs BlockSpec streaming); ``chunk`` / ``block_b`` override its tiling
     block params.  Results are memoized by :func:`_cache_key`.
+
+    ``mesh`` (a ``jax.sharding.Mesh``) makes the compiled artifact
+    mesh-aware: the xla backend pins the input batch/stream axis over the
+    DP axes and row-parallels the gate-weight ROMs over ``"model"`` (GSPMD
+    places the all-reduce at the gate nonlinearity); the pallas backend
+    shard_maps the folded C-slow × batch grid over the DP axes.  The cache
+    and ledger key on the mesh identity, so single-device and mesh
+    artifacts never alias.
 
     ``optimize="latency" | "throughput" | "resources"`` runs the paper's
     Fig. 10 optimization loop instead of one fixed synthesis: the
@@ -483,7 +509,8 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     if backend != "ref" and backend not in codegen.BACKENDS:
         raise ValueError(
             f"unknown backend '{backend}'; available: {codegen.BACKENDS}")
-    key = _cache_key(spec, batch, backend, double_buffer, chunk, block_b)
+    key = _cache_key(spec, batch, backend, double_buffer, chunk, block_b,
+                     mesh)
     if key in _SYNTH_CACHE:
         O.metrics.counter("synth_cache", "synthesize() memo", result="hit").inc()
         return dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
@@ -520,7 +547,8 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
         for attempt in range(max(0, retries) + 1):
             try:
                 fwd, bparams = _build_fwd(program, spec, bk, quant,
-                                          double_buffer, chunk, block_b)
+                                          double_buffer, chunk, block_b,
+                                          mesh)
                 analysis = _analyze_compiled(fwd, bparams, u)
                 break
             except Exception as e:  # noqa: BLE001 — degrade, don't die
@@ -541,7 +569,8 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     params = bparams
 
     # predicted-vs-measured ledger: the Fig. 10 loop's instrumentation
-    lkey = _ledger_key(spec, batch, used, double_buffer, chunk, block_b)
+    lkey = _ledger_key(spec, batch, used, double_buffer, chunk, block_b,
+                       mesh)
     O.ledger.predict(
         lkey,
         fsm_cycles=codegen.rtlsim.fsm_cycle_estimate(program),

@@ -21,13 +21,37 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
-def make_local_mesh():
-    """All local devices as ("pod","data","model") = (1,1,N) — lets the same
-    sharded program run on one host (smoke tests, examples)."""
+def make_local_mesh(dp: int | None = None, tp: int | None = None):
+    """Local-host mesh with axes ``("pod", "data", "model")``.
+
+    Default (no arguments) keeps the historical shape (1, 1, N): every local
+    device on the model axis, so existing single-host TP smoke tests run
+    unchanged.  An explicit ``(dp, tp)`` requests a real 2-D mesh —
+    ``dp × tp`` devices as (1, dp, tp) — which is what the serving stack's
+    ShardPlan and the ``--mesh dpxtp`` CLI flags consume.  Either both or
+    neither of ``dp``/``tp`` must be given; ``dp * tp`` may use a leading
+    subset of the local devices but must not exceed them.
+    """
     import numpy as np
 
     devs = np.array(jax.devices())
-    return jax.sharding.Mesh(devs.reshape(1, 1, -1), ("pod", "data", "model"))
+    if (dp is None) != (tp is None):
+        raise ValueError("make_local_mesh: pass both dp and tp, or neither")
+    if dp is None:
+        return jax.sharding.Mesh(devs.reshape(1, 1, -1),
+                                 ("pod", "data", "model"))
+    dp, tp = int(dp), int(tp)
+    if dp < 1 or tp < 1:
+        raise ValueError(f"make_local_mesh: dp={dp} and tp={tp} must be >= 1")
+    need = dp * tp
+    if need > devs.size:
+        raise ValueError(
+            f"make_local_mesh: dp*tp = {dp}*{tp} = {need} exceeds the "
+            f"{devs.size} local device(s); force host devices with "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N or shrink "
+            "the mesh")
+    return jax.sharding.Mesh(devs[:need].reshape(1, dp, tp),
+                             ("pod", "data", "model"))
 
 
 # Hardware constants for the roofline model (TPU v5e per chip).

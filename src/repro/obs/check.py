@@ -10,17 +10,38 @@ build instead of silently producing a Perfetto file that won't load.
 Files are dispatched on content: a top-level ``traceEvents`` key is checked
 as a Chrome trace, a ``repro.tune`` schema (or ``suite: tune``) as an
 auto-tuner Pareto report, a ``repro.chaos`` schema (or ``suite: chaos``) as
-a fault-injection report, anything else as a metrics document.
+a fault-injection report, a ``repro.loadgen`` schema as a trace-replay
+report, anything else as a metrics document.
+
+Mesh-aware serving artifacts carry a ``shard`` dimension everywhere: a
+``shard=N`` label on counters/gauges, a ``shard`` arg on request spans, a
+``shard`` column on ledger rows, and ``per_shard`` rows in the loadgen
+report.  Wherever one appears it must be a non-negative integer — a
+malformed shard label would silently break per-shard aggregation in
+dashboards, so it fails the check instead.
 """
 
 from __future__ import annotations
 
 import json
+import re
 import sys
 
 _NUM = (int, float)
 
 TRACE_PHASES = {"X", "B", "E", "i", "I", "C", "M", "b", "e", "n", "s", "t", "f"}
+
+_SHARD_LABEL = re.compile(r"\bshard=([^,}]*)")
+
+
+def _check_shard(value, where: str) -> list[str]:
+    """A shard tag must be a non-negative integer (string digits accepted
+    for flattened metric labels)."""
+    if isinstance(value, bool) or not isinstance(value, (int, str)) \
+            or (isinstance(value, str) and not value.isdigit()) \
+            or int(value) < 0:
+        return [f"{where}: shard {value!r} is not a non-negative integer"]
+    return []
 
 
 def check_trace_doc(doc) -> list[str]:
@@ -52,6 +73,9 @@ def check_trace_doc(doc) -> list[str]:
                 errs.append(f"{where} complete event needs 'dur' >= 0")
         if ph in ("C", "M") and not isinstance(ev.get("args"), dict):
             errs.append(f"{where} phase {ph!r} needs an 'args' object")
+        args = ev.get("args")
+        if isinstance(args, dict) and "shard" in args:
+            errs.extend(_check_shard(args["shard"], where))
     return errs
 
 
@@ -72,6 +96,10 @@ def check_metrics_doc(doc) -> list[str]:
         for name, v in vals.items():
             if not isinstance(v, _NUM):
                 errs.append(f"metrics: {kind}[{name}] is not numeric")
+            m = _SHARD_LABEL.search(name)
+            if m:
+                errs.extend(_check_shard(m.group(1),
+                                         f"metrics: {kind}[{name}]"))
     hists = snap.get("histograms", {})
     if not isinstance(hists, dict):
         errs.append("metrics: 'histograms' must be an object")
@@ -96,6 +124,8 @@ def check_metrics_doc(doc) -> list[str]:
         for key in ("fsm_cycles", "flops", "measured_wall_us"):
             if key not in row:
                 errs.append(f"metrics: ledger[{i}] missing '{key}'")
+        if "shard" in row:
+            errs.extend(_check_shard(row["shard"], f"metrics: ledger[{i}]"))
     if "stats" in doc and not isinstance(doc["stats"], dict):
         errs.append("metrics: 'stats' must be an object")
     return errs
@@ -252,6 +282,94 @@ def check_chaos_doc(doc) -> list[str]:
     return errs
 
 
+def check_loadgen_doc(doc) -> list[str]:
+    """Validate a ``repro.loadgen/v1`` trace-replay report: a seeded spec,
+    consistent request/token accounting, a stable tokens digest, and
+    ``per_shard`` rows that sum to the aggregate (one row per data shard
+    when a mesh is attached, a single shard-0 row otherwise)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["loadgen: top level must be an object"]
+    if doc.get("schema") != "repro.loadgen/v1":
+        errs.append(f"loadgen: unknown schema {doc.get('schema')!r}")
+    spec = doc.get("spec")
+    if not isinstance(spec, dict):
+        errs.append("loadgen: missing 'spec' object")
+    else:
+        for key in ("seed", "num_requests", "max_new_tokens"):
+            if not isinstance(spec.get(key), int):
+                errs.append(f"loadgen: spec.{key} must be an integer")
+    for key in ("requests", "completed", "ticks", "decoded_tokens"):
+        v = doc.get(key)
+        if not isinstance(v, int) or v < 0:
+            errs.append(f"loadgen: '{key}' must be a non-negative integer")
+    if isinstance(doc.get("requests"), int) \
+            and isinstance(doc.get("completed"), int) \
+            and doc["completed"] > doc["requests"]:
+        errs.append("loadgen: completed > requests")
+    for key in ("wall_s", "throughput_tok_s"):
+        if not isinstance(doc.get(key), _NUM) or doc[key] < 0:
+            errs.append(f"loadgen: '{key}' must be a non-negative number")
+    reasons = doc.get("by_reason")
+    if not isinstance(reasons, dict):
+        errs.append("loadgen: 'by_reason' must be an object")
+    else:
+        for reason, n in reasons.items():
+            if not isinstance(n, int) or n < 0:
+                errs.append(f"loadgen: by_reason[{reason}] not a count")
+        if isinstance(doc.get("completed"), int) \
+                and sum(n for n in reasons.values()
+                        if isinstance(n, int)) != doc["completed"]:
+            errs.append("loadgen: by_reason counts don't sum to 'completed'")
+    if not isinstance(doc.get("tokens_digest"), str) \
+            or not doc["tokens_digest"]:
+        errs.append("loadgen: missing string 'tokens_digest'")
+    mesh = doc.get("mesh")
+    if mesh is not None:
+        if not isinstance(mesh, dict):
+            errs.append("loadgen: 'mesh' must be an object or null")
+            mesh = None
+        else:
+            for key in ("dp", "tp"):
+                if not isinstance(mesh.get(key), int) or mesh[key] < 1:
+                    errs.append(f"loadgen: mesh.{key} must be a positive "
+                                "integer")
+            if mesh.get("layout") not in ("folded", "sharded"):
+                errs.append(f"loadgen: mesh.layout {mesh.get('layout')!r} "
+                            "must be 'folded' or 'sharded'")
+    rows = doc.get("per_shard")
+    if not isinstance(rows, list) or not rows:
+        errs.append("loadgen: 'per_shard' must be a non-empty list")
+        rows = []
+    seen: set[int] = set()
+    total = 0
+    for i, row in enumerate(rows):
+        where = f"loadgen: per_shard[{i}]"
+        if not isinstance(row, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        errs.extend(_check_shard(row.get("shard"), where))
+        if isinstance(row.get("shard"), int):
+            if row["shard"] in seen:
+                errs.append(f"{where} duplicate shard {row['shard']}")
+            seen.add(row["shard"])
+        for key in ("decoded_tokens", "dispatched", "quarantined"):
+            v = row.get(key)
+            if not isinstance(v, int) or v < 0:
+                errs.append(f"{where}.{key} must be a non-negative integer")
+        if isinstance(row.get("decoded_tokens"), int):
+            total += row["decoded_tokens"]
+    if rows and isinstance(doc.get("decoded_tokens"), int) \
+            and not any(e.startswith("loadgen: per_shard") for e in errs) \
+            and total != doc["decoded_tokens"]:
+        errs.append(f"loadgen: per_shard decoded_tokens sum {total} != "
+                    f"aggregate {doc['decoded_tokens']}")
+    if mesh is not None and isinstance(mesh.get("dp"), int) \
+            and rows and len(rows) != mesh["dp"]:
+        errs.append(f"loadgen: {len(rows)} per_shard rows for dp={mesh['dp']}")
+    return errs
+
+
 def check_file(path: str) -> list[str]:
     try:
         with open(path) as fh:
@@ -268,6 +386,9 @@ def check_file(path: str) -> list[str]:
             str(doc.get("schema", "")).startswith("repro.chaos")
             or doc.get("suite") == "chaos"):
         errs = check_chaos_doc(doc)
+    elif isinstance(doc, dict) \
+            and str(doc.get("schema", "")).startswith("repro.loadgen"):
+        errs = check_loadgen_doc(doc)
     else:
         errs = check_metrics_doc(doc)
     return [f"{path}: {e}" for e in errs]

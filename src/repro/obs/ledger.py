@@ -33,7 +33,7 @@ class Ledger:
         # key -> {"predicted": {...}, "measured": {...}}
         self._rows: dict[str, dict] = {}
 
-    def _row(self, key: str) -> dict:
+    def _row(self, key: str, shard: int | None = None) -> dict:
         row = self._rows.get(key)
         if row is None:
             row = self._rows[key] = {
@@ -41,20 +41,26 @@ class Ledger:
                 "measured": {"calls": 0, "wall_s_total": 0.0,
                              "wall_s_best": None},
             }
+        if shard is not None:
+            row["shard"] = int(shard)
         return row
 
-    def predict(self, key: str, **vals) -> None:
+    def predict(self, key: str, shard: int | None = None, **vals) -> None:
         """Attach predicted quantities (``fsm_cycles``, ``flops``,
-        ``peak_bytes``, ...); None values are dropped."""
+        ``peak_bytes``, ...); None values are dropped.  ``shard`` tags the
+        row with the data shard it belongs to (mesh-aware serving rows)."""
         with self._lock:
-            self._row(key)["predicted"].update(
+            self._row(key, shard)["predicted"].update(
                 {k: v for k, v in vals.items() if v is not None})
 
-    def measure(self, key: str, wall_s: float, **vals) -> None:
+    def measure(self, key: str, wall_s: float, shard: int | None = None,
+                **vals) -> None:
         """Record one measured execution (best-of is the reported number —
-        same convention as the benchmark harness's median-of-iters)."""
+        same convention as the benchmark harness's median-of-iters).
+        ``shard`` tags the row with its data shard, exported as the
+        ``shard`` column ``repro.obs.check`` validates."""
         with self._lock:
-            m = self._row(key)["measured"]
+            m = self._row(key, shard)["measured"]
             m["calls"] += 1
             m["wall_s_total"] += wall_s
             if m["wall_s_best"] is None or wall_s < m["wall_s_best"]:
@@ -88,6 +94,8 @@ class Ledger:
                    "measured_wall_us": (None if m["wall_s_best"] is None
                                         else m["wall_s_best"] * 1e6),
                    "measured_calls": m["calls"]}
+            if "shard" in row:
+                rec["shard"] = row["shard"]
             extra = {k: v for k, v in m.items()
                      if k not in ("calls", "wall_s_total", "wall_s_best")}
             if extra:

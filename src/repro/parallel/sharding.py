@@ -74,9 +74,15 @@ def _guard(spec: P, shape: tuple[int, ...], mesh: Mesh) -> P:
 # parameter rules
 # ---------------------------------------------------------------------------
 
-def _param_rules(cfg: ModelConfig, mesh: Mesh):
-    """Ordered (regex, spec) rules.  'G' in comments = stacked group axis."""
-    f = fsdp_axis(mesh)
+def _param_rules(cfg: ModelConfig, mesh: Mesh, *, fsdp: bool = True):
+    """Ordered (regex, spec) rules.  'G' in comments = stacked group axis.
+
+    ``fsdp=False`` drops the "data" factor from every rule (parameters
+    replicate over DP, TP factors stay) — the *serving* layout, where the
+    data axis carries decode slots and an FSDP all-gather per tick would
+    dwarf the decode step it feeds.
+    """
+    f = fsdp_axis(mesh) if fsdp else None
     tp = None if cfg.pure_dp else "model"
     atp = tp if cfg.attn_tp else None
     return [
@@ -151,9 +157,10 @@ def _path_str(path) -> str:
     return "/".join(parts)
 
 
-def param_specs(cfg: ModelConfig, params_tree: PyTree, mesh: Mesh) -> PyTree:
+def param_specs(cfg: ModelConfig, params_tree: PyTree, mesh: Mesh,
+                *, fsdp: bool = True) -> PyTree:
     """PartitionSpec pytree matching ``params_tree`` (works on shape structs)."""
-    rules = _param_rules(cfg, mesh)
+    rules = _param_rules(cfg, mesh, fsdp=fsdp)
 
     def one(path, leaf):
         return _spec_for_path(_path_str(path), leaf.shape, rules, mesh)
@@ -161,8 +168,9 @@ def param_specs(cfg: ModelConfig, params_tree: PyTree, mesh: Mesh) -> PyTree:
     return jax.tree_util.tree_map_with_path(one, params_tree)
 
 
-def param_shardings(cfg, params_tree, mesh) -> PyTree:
-    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(cfg, params_tree, mesh))
+def param_shardings(cfg, params_tree, mesh, *, fsdp: bool = True) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(cfg, params_tree, mesh, fsdp=fsdp))
 
 
 # ---------------------------------------------------------------------------

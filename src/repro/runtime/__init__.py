@@ -2,6 +2,8 @@ from .trainer import SimulatedFailure, StragglerMonitor, Trainer, TrainerConfig
 from .server import DecodeServer, Request, splice_cache
 from .scheduler import AsyncServer, Scheduler, SchedulerConfig
 from .prefix_cache import PrefixCache
+from .shard_plan import ShardPlan, make_shard_plan
+from .loadgen import Trace, TraceItem, TraceSpec, make_trace, replay
 from .faults import (
     FAULT_POINTS,
     FaultError,
@@ -23,6 +25,13 @@ __all__ = [
     "Scheduler",
     "SchedulerConfig",
     "PrefixCache",
+    "ShardPlan",
+    "make_shard_plan",
+    "Trace",
+    "TraceItem",
+    "TraceSpec",
+    "make_trace",
+    "replay",
     "FAULT_POINTS",
     "FaultError",
     "FaultPlan",

@@ -88,8 +88,10 @@ class PrefixCache:
     """Radix tree of prompt prefixes with LRU byte-budget eviction."""
 
     def __init__(self, budget_bytes: int = 256 << 20,
-                 metrics: MetricsRegistry | None = None):
+                 metrics: MetricsRegistry | None = None,
+                 shard: int | None = None):
         self.budget_bytes = int(budget_bytes)
+        self.shard = shard
         self.root = _Node()
         self.bytes_in_use = 0
         self._clock = 0
@@ -97,21 +99,32 @@ class PrefixCache:
         # tree walks on the admission hot path (insert/evict/telemetry)
         # Hit/miss/eviction accounting lives in a MetricsRegistry (pass the
         # owning server's to share a scope); telemetry() is a view over it.
+        # Under a ShardPlan the server owns one PrefixCache per data shard
+        # (each with 1/dp of the byte budget): ``shard=N`` labels every
+        # counter so the per-shard hit/eviction balance is visible in one
+        # shared registry.
         self.metrics = metrics if metrics is not None else MetricsRegistry()
         m = self.metrics
+        lbl = {} if shard is None else {"shard": shard}
         self._c_hits = m.counter(
-            "prefix_hits", "full-prompt hits (0 prompt steps recomputed)")
+            "prefix_hits", "full-prompt hits (0 prompt steps recomputed)",
+            **lbl)
         self._c_partial = m.counter("prefix_partial_hits",
-                                    "resumed mid-prompt")
-        self._c_misses = m.counter("prefix_misses", "no usable checkpoint")
+                                    "resumed mid-prompt", **lbl)
+        self._c_misses = m.counter("prefix_misses", "no usable checkpoint",
+                                   **lbl)
         self._c_insertions = m.counter("prefix_insertions",
-                                       "checkpoints stored")
+                                       "checkpoints stored", **lbl)
         self._c_evictions = m.counter("prefix_evictions",
-                                      "checkpoints dropped (LRU budget)")
+                                      "checkpoints dropped (LRU budget)",
+                                      **lbl)
         self._c_saved = m.counter("prefix_prompt_steps_saved",
-                                  "prompt steps served from checkpoints")
-        self._g_bytes = m.gauge("prefix_bytes_in_use", "stored state bytes")
-        self._g_entries = m.gauge("prefix_entries", "stored checkpoints")
+                                  "prompt steps served from checkpoints",
+                                  **lbl)
+        self._g_bytes = m.gauge("prefix_bytes_in_use", "stored state bytes",
+                                **lbl)
+        self._g_entries = m.gauge("prefix_entries", "stored checkpoints",
+                                  **lbl)
 
     # -- internal ----------------------------------------------------------
 
@@ -214,6 +227,28 @@ class PrefixCache:
             node = child
         return sorted(found, key=lambda e: -e.length)
 
+    def peek_depth(self, tokens: Sequence[int]) -> int:
+        """Deepest stored prefix length along the prompt's path WITHOUT
+        touching LRU clocks — the shard-affinity probe: the server asks
+        every shard's cache how deep its best checkpoint goes, then places
+        the request on the deepest shard; only that shard's subsequent
+        :meth:`lookup` perturbs recency."""
+        tokens = list(int(t) for t in tokens)
+        best = 0
+        node, i = self.root, 0
+        while i < len(tokens):
+            child = node.children.get(tokens[i])
+            if child is None:
+                break
+            m = _common_len(child.edge, tokens[i:])
+            i += m
+            if m < len(child.edge):
+                break
+            if child.entry is not None:
+                best = child.entry.length
+            node = child
+        return best
+
     def record_hit(self, steps_saved: int, *, full: bool) -> None:
         """One admission decision: a full hit (whole prompt spliced) or a
         partial hit (resumed mid-prompt).  Callers record exactly ONE of
@@ -241,9 +276,12 @@ class PrefixCache:
 
     def telemetry(self) -> dict:
         self._track()
-        return dict(self.stats, bytes_in_use=self.bytes_in_use,
-                    budget_bytes=self.budget_bytes,
-                    entries=len(self._entry_nodes))
+        out = dict(self.stats, bytes_in_use=self.bytes_in_use,
+                   budget_bytes=self.budget_bytes,
+                   entries=len(self._entry_nodes))
+        if self.shard is not None:
+            out["shard"] = self.shard
+        return out
 
     def reset_stats(self) -> None:
         """Zero the counters; stored checkpoints are untouched."""

@@ -241,6 +241,19 @@ class Scheduler:
         req.dispatched_at = now
         return req
 
+    def record_placement(self, req: "Request", shard: int) -> None:
+        """Stamp the data shard a popped request was placed on (shard-affine
+        admission under a :class:`~repro.runtime.shard_plan.ShardPlan`).
+        Placement is decided *after* the pop — affinity needs the request's
+        prompt against every shard's prefix cache — so this is a separate
+        call rather than a ``next_request`` argument.  Lands a per-shard
+        ``sched_dispatched_shard{shard=N}`` count so the placement
+        distribution (affinity hits vs. spillover) is visible in
+        telemetry."""
+        req.shard = int(shard)
+        self.metrics.counter("sched_dispatched_shard",
+                             "dispatches by data shard", shard=shard).inc()
+
     def __len__(self) -> int:
         return self._size
 
@@ -259,8 +272,14 @@ class Scheduler:
         }
 
     def telemetry(self) -> dict:
-        return dict(self.stats, pending=self._size,
-                    policy=self.cfg.policy, aging_rate=self.cfg.aging_rate)
+        out = dict(self.stats, pending=self._size,
+                   policy=self.cfg.policy, aging_rate=self.cfg.aging_rate)
+        by_shard = {c.labels["shard"]: c.value
+                    for c in self.metrics.children("sched_dispatched_shard")
+                    if c.value}
+        if by_shard:
+            out["dispatched_by_shard"] = by_shard
+        return out
 
     def reset_stats(self) -> None:
         """Zero the counters (queue contents are untouched)."""

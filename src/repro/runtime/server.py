@@ -56,6 +56,7 @@ from . import faults as faults_lib
 from .faults import TransientFault, Watchdog
 from .prefix_cache import PrefixCache
 from .scheduler import REJECT_DUPLICATE_UID, Scheduler, SchedulerConfig
+from .shard_plan import ShardPlan
 
 PyTree = Any
 
@@ -138,6 +139,7 @@ class Request:
     finish_reason: str | None = None
     truncated: bool = False     # prompt cut to the admission limit
     prefix_hit_tokens: int = 0  # prompt steps served from the prefix cache
+    shard: int | None = None    # data shard placed on (None = unsharded)
 
 
 @dataclasses.dataclass
@@ -162,9 +164,18 @@ class DecodeServer:
                  prefill_adaptive: bool = False,
                  obs: obs_lib.Observability | None = None,
                  faults: "faults_lib.FaultPlan | None" = None,
-                 watchdog_s: float | None = None):
+                 watchdog_s: float | None = None,
+                 plan: ShardPlan | None = None):
         self.cfg, self.params = cfg, params
         self.B, self.S = num_slots, max_seq
+        # Mesh placement (README §Sharded serving): ``plan`` maps the slot
+        # pool onto the mesh's data axis in contiguous per-shard blocks and
+        # TP-factors the gate contractions over ``model``.  plan=None is the
+        # single-device server, bit for bit.
+        self.plan = plan
+        self.dp = plan.dp if plan is not None else 1
+        self._slots_per_shard = (plan.validate_slots(num_slots)
+                                 if plan is not None else num_slots)
         self.eos_id = eos_id
         self.block_k = block_k
         self.persistent = persistent
@@ -187,9 +198,24 @@ class DecodeServer:
         self.obs = obs if obs is not None else obs_lib.Observability()
         self._tr = self.obs.tracer
         self._tr.thread_name(0, "server")
-        self.prefix_cache = (PrefixCache(prefix_cache_bytes,
-                                         metrics=self.obs.metrics)
-                             if prefix_cache_bytes else None)
+        # One PrefixCache per data shard (1/dp of the byte budget each,
+        # shard-labeled counters): a hit is only a hit on the shard whose
+        # slots hold the checkpointed batch rows, so admission probes every
+        # shard's tree (peek_depth) and places the request shard-affinely.
+        if prefix_cache_bytes:
+            if plan is None:
+                self.prefix_caches = [PrefixCache(prefix_cache_bytes,
+                                                  metrics=self.obs.metrics)]
+            else:
+                per_shard = max(1, int(prefix_cache_bytes) // self.dp)
+                self.prefix_caches = [
+                    PrefixCache(per_shard, metrics=self.obs.metrics, shard=s)
+                    for s in range(self.dp)]
+        else:
+            self.prefix_caches = None
+        # back-compat alias for the unsharded server's single cache
+        self.prefix_cache = (self.prefix_caches[0]
+                             if self.prefix_caches and plan is None else None)
         if isinstance(scheduler, Scheduler):
             self.scheduler = scheduler
             self.scheduler.prompt_limit = self.scheduler.prompt_limit or (max_seq - 1)
@@ -204,6 +230,24 @@ class DecodeServer:
         self._watch = Watchdog(watchdog_s) if watchdog_s else None
         self._last_work = 0                 # progress marker for the watchdog
         self.caches = lm.init_cache(cfg, num_slots, max_seq)
+        self._repl = None
+        if plan is not None and not plan.fold_data:
+            # Commit the decode state to the mesh: slot (batch) axis of every
+            # cache leaf over the data axis, params replicated over data with
+            # TP factors over model (fsdp=False — the data axis carries
+            # slots, not ZeRO shards).  From here on every jitted driver
+            # (decode_step, block scan, prefill/chunk fns) runs as one SPMD
+            # program over the mesh; GSPMD inserts the gate all-reduce at
+            # the TP contraction boundary.
+            # A fold_data plan skips this block on purpose: its shards are
+            # logical slot pools decoded as C-slow streams through one
+            # fused dispatch (see ShardPlan docstring), so the state stays
+            # single-device exactly like plan=None.
+            self.params = jax.device_put(
+                self.params, plan.param_shardings(cfg, self.params))
+            self.caches = jax.device_put(
+                self.caches, plan.cache_shardings(cfg, self.caches))
+            self._repl = plan.replicated()
         self.pos = np.zeros(num_slots, np.int32)        # next write position
         self.live = np.zeros(num_slots, bool)
         self.reserved = np.zeros(num_slots, bool)       # prefill job in flight
@@ -256,6 +300,16 @@ class DecodeServer:
             "decode ticks aborted on a transient dispatch error")
         self._m_stalled = m.counter(
             "server_stalled", "watchdog firings (no progress in bound)")
+        # per-shard telemetry: token counters labeled shard=N, and one trace
+        # track per data shard (tid = 10_000 + s) for live-slot counters
+        self._m_tokens_shard = (
+            [m.counter("decoded_tokens_shard",
+                       "tokens generated by data shard", shard=s)
+             for s in range(self.dp)]
+            if plan is not None else None)
+        if plan is not None and self._tr.enabled:
+            for s in range(self.dp):
+                self._tr.thread_name(10_000 + s, f"shard {s}")
         self._tick_prompt_steps = 0
         self._tick_uncontended = True       # no slot is live before tick 0
 
@@ -317,12 +371,53 @@ class DecodeServer:
             self._inflight[req.uid] = req
         return admitted
 
-    def _free_slot(self) -> int | None:
-        for b in range(self.B):
+    def _free_slot(self, shard: int | None = None) -> int | None:
+        """First free slot — in ``shard``'s contiguous block when given,
+        anywhere in the pool otherwise."""
+        slots = (range(self.B) if shard is None
+                 else self.plan.slots_of_shard(shard, self.B))
+        for b in slots:
             if not self.live[b] and not self.reserved[b] \
                     and not self.quarantined[b]:
                 return b
         return None
+
+    # -- mesh placement helpers (all trivial when plan is None) -------------
+
+    def _shard_of(self, b: int) -> int:
+        return 0 if self.plan is None else b // self._slots_per_shard
+
+    def _pc(self, shard: int) -> PrefixCache | None:
+        """The prefix cache owning ``shard``'s slots (the single cache when
+        unsharded)."""
+        if self.prefix_caches is None:
+            return None
+        return self.prefix_caches[shard if self.plan is not None else 0]
+
+    def _to_mesh(self, tree: PyTree) -> PyTree:
+        """Lift a splice source onto the mesh (replicated).  Eager splices
+        mixing a mesh-committed destination with a single-device source
+        raise in jax; every B=1 prefill state and prefix checkpoint passes
+        through here before touching the sharded slot arrays.  No-op when
+        unsharded or folded (state is single-device in both)."""
+        return tree if self._repl is None else jax.device_put(tree, self._repl)
+
+    def _shard_load(self, shard: int) -> int:
+        return sum(1 for b in self.plan.slots_of_shard(shard, self.B)
+                   if self.live[b] or self.reserved[b])
+
+    def _place(self, req: Request) -> int:
+        """Shard-affine placement: among shards with a free slot, prefer the
+        one whose prefix cache holds the deepest checkpoint for this prompt
+        (ties → least loaded, then lowest id); without prefix caches it is
+        pure least-loaded balancing."""
+        free = [s for s in range(self.dp)
+                if self._free_slot(shard=s) is not None]
+        if self.prefix_caches is not None:
+            return min(free, key=lambda s: (
+                -self.prefix_caches[s].peek_depth(req.prompt),
+                self._shard_load(s), s))
+        return min(free, key=lambda s: (self._shard_load(s), s))
 
     def _retire(self, req: Request, now: float, reason: str) -> None:
         req.done_at = req.retired_at = now
@@ -363,11 +458,14 @@ class DecodeServer:
         tr.thread_name(tid, f"req {req.uid}")
         t_sub = tr.to_us(req.submitted_at)
         t_done = max(tr.to_us(now), t_sub)
+        args = {"uid": req.uid, "prompt_tokens": len(req.prompt),
+                "out_tokens": n_out,
+                "finish_reason": req.finish_reason,
+                "prefix_hit_tokens": req.prefix_hit_tokens}
+        if req.shard is not None:
+            args["shard"] = req.shard
         tr.complete("request", t_sub, t_done - t_sub, cat="request", tid=tid,
-                    args={"uid": req.uid, "prompt_tokens": len(req.prompt),
-                          "out_tokens": n_out,
-                          "finish_reason": req.finish_reason,
-                          "prefix_hit_tokens": req.prefix_hit_tokens})
+                    args=args)
         t_disp = min(tr.to_us(req.dispatched_at), t_done) \
             if req.dispatched_at is not None else t_done
         tr.complete("queue_wait", t_sub, t_disp - t_sub, cat="request",
@@ -444,6 +542,10 @@ class DecodeServer:
         self.live[b] = False
         self.quarantined[b] = True
         self._m_quar.inc()
+        if self.plan is not None:
+            self.obs.metrics.counter("slots_quarantined_shard",
+                                     "quarantines by data shard",
+                                     shard=self._shard_of(b)).inc()
 
     def _scrub_quarantined(self) -> None:
         for b in range(self.B):
@@ -558,6 +660,12 @@ class DecodeServer:
             "last_progress_idle_s":
                 self._watch.idle_s() if self._watch else None,
         }
+        if self.plan is not None:
+            out["mesh"] = self.plan.describe()
+            out["quarantined_by_shard"] = [
+                sum(int(self.quarantined[b]) for b in
+                    self.plan.slots_of_shard(s, self.B))
+                for s in range(self.dp)]
         plan = self.faults if self.faults is not None else faults_lib.get_plan()
         if plan is not None:
             out["faults"] = plan.report()
@@ -594,10 +702,11 @@ class DecodeServer:
         chunk-grid-aligned boundaries are resumable (a resumed scan then
         recomputes the same chunk shapes as a cold run); the prompt-end
         boundary additionally carries last-token logits for full hits."""
-        if self.prefix_cache is None or job.pos == 0:
+        pc = self._pc(self._shard_of(job.slot))
+        if pc is None or job.pos == 0:
             return
         aligned = self.prefill_chunk > 0 and job.pos % self.prefill_chunk == 0
-        self.prefix_cache.insert(
+        pc.insert(
             job.req.prompt[: job.pos],
             self._slice_prefix(job.caches, job.pos),
             logits=job.logits[0] if job.logits is not None else None,
@@ -621,9 +730,12 @@ class DecodeServer:
         return jax.tree_util.tree_map_with_path(one, caches)
 
     def _inflate_entry(self, entry) -> PyTree:
-        """Re-expand a stored checkpoint to a full B=1, S_max cache."""
-        fresh = lm.init_cache(self.cfg, 1, self.S)
-        return splice_cache(fresh, entry.caches, 0, entry.length, self.S)
+        """Re-expand a stored checkpoint to a full B=1, S_max cache.  Under a
+        plan the fresh buffer is lifted first: stored checkpoints are mesh-
+        committed, and eager splice ops reject mixed device sets."""
+        fresh = self._to_mesh(lm.init_cache(self.cfg, 1, self.S))
+        return splice_cache(fresh, self._to_mesh(entry.caches), 0,
+                            entry.length, self.S)
 
     def _admit(self) -> None:
         """Fill free slots from the scheduler.  Admission is a prefix-cache
@@ -635,8 +747,7 @@ class DecodeServer:
         program, shared decode program; other slots' states are untouched).
         """
         while True:
-            b = self._free_slot()
-            if b is None:
+            if self._free_slot() is None:
                 return
             req = self.scheduler.next_request()
             if req is None:
@@ -647,14 +758,23 @@ class DecodeServer:
                 self._retire(req, now, "max_tokens")
                 continue
             plen = len(req.prompt)
+            if self.plan is None:
+                shard = 0
+                b = self._free_slot()
+            else:
+                shard = self._place(req)
+                b = self._free_slot(shard=shard)
+                self.scheduler.record_placement(req, shard)
+            pc = self._pc(shard)
 
             entry = None
-            if self.prefix_cache is not None:
-                candidates = self.prefix_cache.lookup(req.prompt)
+            if pc is not None:
+                candidates = pc.lookup(req.prompt)
                 full = next((e for e in candidates
                              if e.length == plen and e.logits is not None), None)
                 if full is not None:
-                    self.caches = splice_cache(self.caches, full.caches, b,
+                    self.caches = splice_cache(self.caches,
+                                               self._to_mesh(full.caches), b,
                                                plen, self.S)
                     spec = self._fire("prefix.splice")
                     if spec is not None:
@@ -662,7 +782,7 @@ class DecodeServer:
                         # the per-slot non-finite detection, not here
                         self._poison_slot(b, spec.mode)
                     req.prefix_hit_tokens = plen
-                    self.prefix_cache.record_hit(plen, full=True)
+                    pc.record_hit(plen, full=True)
                     self._start_request(req, b, np.asarray(full.logits))
                     continue
                 if self.prefill_chunk > 0:
@@ -679,33 +799,37 @@ class DecodeServer:
                                     and self._tick_uncontended
                                     and not self._jobs)
                 if not adaptive_oneshot:
-                    caches = (self._inflate_entry(entry) if entry is not None
-                              else lm.init_cache(self.cfg, 1, self.S))
+                    # job states live on the mesh (replicated) so chunk fns
+                    # consuming the mesh-sharded params never mix device sets
+                    caches = self._to_mesh(
+                        self._inflate_entry(entry) if entry is not None
+                        else lm.init_cache(self.cfg, 1, self.S))
                     start = entry.length if entry is not None else 0
-                    if self.prefix_cache is not None:
+                    if pc is not None:
                         if entry is not None:
                             req.prefix_hit_tokens = start
-                            self.prefix_cache.record_hit(start, full=False)
+                            pc.record_hit(start, full=False)
                         else:
-                            self.prefix_cache.record_miss()
+                            pc.record_miss()
                     self.reserved[b] = True
                     self._jobs.append(_PrefillJob(req=req, slot=b,
                                                   caches=caches, pos=start))
                     continue
 
             # legacy one-shot prefill
-            if self.prefix_cache is not None:
-                self.prefix_cache.record_miss()
+            if pc is not None:
+                pc.record_miss()
             toks = jnp.asarray(np.array(req.prompt, np.int32)[None])
             with self._tr.span("prefill_oneshot", cat="prefill",
                                args={"uid": req.uid, "tokens": plen}):
-                logits, pc = self._prefill(self.params, toks)
+                logits, pcaches = self._prefill(self.params, toks)
             self._m_prompt_steps.inc(plen)
             self._tick_prompt_steps += plen
-            self.caches = splice_cache(self.caches, pc, b, plen, self.S)
-            if self.prefix_cache is not None:
-                self.prefix_cache.insert(req.prompt, pc, logits=logits[0],
-                                         resumable=False)
+            self.caches = splice_cache(self.caches, self._to_mesh(pcaches),
+                                       b, plen, self.S)
+            if pc is not None:
+                pc.insert(req.prompt, pcaches, logits=logits[0],
+                          resumable=False)
             self._start_request(req, b, np.asarray(logits[0]))
 
     # ------------------------------------------------------------------
@@ -750,8 +874,9 @@ class DecodeServer:
             self._cache_boundary(job)
             if job.pos >= plen:
                 self._jobs.remove(job)
-                self.caches = splice_cache(self.caches, job.caches, job.slot,
-                                           plen, self.S)
+                self.caches = splice_cache(self.caches,
+                                           self._to_mesh(job.caches),
+                                           job.slot, plen, self.S)
                 self.reserved[job.slot] = False
                 self._start_request(job.req, job.slot,
                                     np.asarray(job.logits[0]))
@@ -779,6 +904,13 @@ class DecodeServer:
         if not self._tick_uncontended:
             self._m_tick_contended.set_max(self._tick_prompt_steps)
         self._m_live.set(int(self.live.sum()))
+        if self.plan is not None and self._tr.enabled:
+            for s in range(self.dp):
+                self._tr.counter(
+                    "live_slots",
+                    {"live": sum(int(self.live[b]) for b in
+                                 self.plan.slots_of_shard(s, self.B))},
+                    tid=10_000 + s)
 
     # ------------------------------------------------------------------
     # decode drivers
@@ -844,6 +976,8 @@ class DecodeServer:
                 nxt = int(np.argmax(logits[b]))
             req.out_tokens.append(nxt)
             self._m_tokens.inc()
+            if self._m_tokens_shard is not None:
+                self._m_tokens_shard[self._shard_of(b)].inc()
             if req.first_token_at is None:
                 req.first_token_at = now
             self.cur_tokens[b] = nxt
@@ -980,6 +1114,8 @@ class DecodeServer:
                 req = self.slot_req[b]
                 req.out_tokens.append(int(toks[t, b]))
                 self._m_tokens.inc()
+                if self._m_tokens_shard is not None:
+                    self._m_tokens_shard[self._shard_of(b)].inc()
                 if req.first_token_at is None:
                     req.first_token_at = now
                 if done_now[t, b]:
@@ -1039,8 +1175,29 @@ class DecodeServer:
             "scheduler": self.scheduler.telemetry(),
             "health": self.health(),
         }
-        if self.prefix_cache is not None:
-            out["prefix_cache"] = self.prefix_cache.telemetry()
+        if self.plan is not None:
+            out["mesh"] = dict(
+                self.plan.describe(),
+                slots_per_shard=self._slots_per_shard,
+                live_by_shard=[
+                    sum(int(self.live[b]) for b in
+                        self.plan.slots_of_shard(s, self.B))
+                    for s in range(self.dp)],
+                decoded_tokens_by_shard=[
+                    int(c.value) for c in self._m_tokens_shard],
+            )
+        if self.prefix_caches:
+            if self.plan is None:
+                out["prefix_cache"] = self.prefix_cache.telemetry()
+            else:
+                per = [c.telemetry() for c in self.prefix_caches]
+                agg = {k: sum(p[k] for p in per)
+                       for k in ("hits", "partial_hits", "misses",
+                                 "insertions", "evictions",
+                                 "prompt_steps_saved", "bytes_in_use",
+                                 "budget_bytes", "entries")}
+                agg["per_shard"] = per
+                out["prefix_cache"] = agg
         if reset:
             self.reset_stats()
         return out
@@ -1052,8 +1209,8 @@ class DecodeServer:
         a caller injected a Scheduler with its own registry."""
         self.obs.metrics.reset()
         self.scheduler.reset_stats()
-        if self.prefix_cache is not None:
-            self.prefix_cache.reset_stats()
+        for pc in self.prefix_caches or ():
+            pc.reset_stats()
 
     def run_until_drained(self, max_ticks: int = 10_000,
                           persistent: bool | None = None) -> list[Request]:

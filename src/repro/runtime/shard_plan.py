@@ -1,0 +1,168 @@
+"""ShardPlan: how the serving stack maps onto a device mesh.
+
+The paper's C-slow lever (Sec. V, Fig. 5) multiplexes C independent streams
+through one physical datapath by widening the *batch* axis; a device mesh
+scales the same axis out — ``c_slow × data_shards`` compose into one folded
+grid because both are batch-dimension interleaves of independent streams.
+This module is the single place that correspondence is written down for the
+runtime:
+
+====================  =========================  ==========================
+paper / single-chip    mesh axis                  serving meaning
+====================  =========================  ==========================
+C-slow streams         ``data`` (DP)              decode slots, one shard's
+                                                  slot pool per data index
+gate MACC lanes        ``model`` (TP)             the ``[D+H, 4H]`` gate
+                                                  contraction, all-reduce at
+                                                  the gate nonlinearity
+j-step unroll          (within-device)            ``block_k`` decode blocks
+====================  =========================  ==========================
+
+A :class:`ShardPlan` owns the mesh and answers the three questions the
+:class:`~repro.runtime.server.DecodeServer` asks:
+
+* **placement** — which shard owns slot ``b`` (contiguous blocks, matching
+  the ``NamedSharding`` layout of the batch axis, so the host-side slot →
+  shard map and the device-side partitioning never disagree);
+* **shardings** — NamedShardings for the decode caches (batch over DP),
+  the serving parameters (replicated over DP, TP factors over ``model`` —
+  FSDP off: the data axis carries slots, not ZeRO shards), and fully
+  replicated splice sources;
+* **identity** — a hashable :meth:`key` for compilation/synthesis caches
+  and a :meth:`describe` dict for ``stats()``/health exports.
+
+Two execution layouts share the same logical topology:
+
+* ``fold_data=False`` (default) — the DP shards are *physically*
+  partitioned: caches/params carry NamedShardings and every decode tick is
+  one GSPMD dispatch across the data axis.  This is the layout for real
+  multi-device hardware, where per-shard work runs on per-shard silicon.
+* ``fold_data=True`` — the DP shards stay *logical* (per-shard slot pools,
+  prefix caches, quarantine, metrics) but execute as C-slow-style
+  interleaved streams through ONE datapath: the batch axis is not device-
+  partitioned, so all shards ride a single fused dispatch.  This is the
+  paper's own degenerate case: when the data-axis devices share one
+  physical executor (e.g. ``--xla_force_host_platform_device_count`` on a
+  single core), partitioning only multiplies the per-step dispatch
+  overhead by ``dp`` — folding keeps the 1-dispatch-per-tick amortization
+  that makes dp scale-out pay.  The load-generator bench measures both
+  layouts so the scale-out claim is empirical, not asserted.
+
+``plan=None`` everywhere means the PR-8 single-device behavior, bit for bit.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """Decode-stack placement over ``mesh`` (axes ``pod``/``data``/``model``,
+    any subset; missing axes count as size 1)."""
+
+    mesh: Mesh
+    fold_data: bool = False
+
+    def __post_init__(self):
+        if self.fold_data and self.tp > 1:
+            raise ValueError(
+                "ShardPlan(fold_data=True) folds all DP shards through one "
+                "datapath; tensor parallelism needs the physical layout "
+                f"(got tp={self.tp})")
+
+    @property
+    def dp(self) -> int:
+        """Data-parallel shard count: the product of the DP axes."""
+        return int(self.mesh.shape.get("pod", 1)
+                   * self.mesh.shape.get("data", 1))
+
+    @property
+    def tp(self) -> int:
+        return int(self.mesh.shape.get("model", 1))
+
+    @property
+    def dp_axes(self) -> tuple[str, ...]:
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    # -- placement ---------------------------------------------------------
+
+    def validate_slots(self, num_slots: int) -> int:
+        """Slots per shard; raises unless the pool divides evenly (a ragged
+        pool would desynchronize the host slot map from the device layout)."""
+        if num_slots % self.dp:
+            raise ValueError(
+                f"ShardPlan: num_slots={num_slots} must divide evenly over "
+                f"dp={self.dp} data shards ({num_slots % self.dp} left over)")
+        return num_slots // self.dp
+
+    def shard_of_slot(self, b: int, num_slots: int) -> int:
+        return b // self.validate_slots(num_slots)
+
+    def slots_of_shard(self, shard: int, num_slots: int) -> range:
+        k = self.validate_slots(num_slots)
+        return range(shard * k, (shard + 1) * k)
+
+    # -- shardings ---------------------------------------------------------
+
+    def cache_shardings(self, cfg, cache_tree: PyTree) -> PyTree:
+        """Decode-cache NamedShardings: batch (slot) dim over the DP axes —
+        the slot pool IS the data axis (see module docstring)."""
+        from repro.parallel.sharding import cache_specs
+
+        specs = cache_specs(cfg, cache_tree, self.mesh, shard_seq=False)
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), specs)
+
+    def param_shardings(self, cfg, params_tree: PyTree) -> PyTree:
+        """Serving parameter NamedShardings: TP over ``model`` where
+        divisible, replicated over DP (``fsdp=False``)."""
+        from repro.parallel.sharding import param_shardings
+
+        return param_shardings(cfg, params_tree, self.mesh, fsdp=False)
+
+    def replicated(self) -> NamedSharding:
+        """Fully-replicated sharding — splice sources (B=1 prefill state,
+        prefix-cache checkpoints) are lifted here before writing into the
+        sharded slot arrays, so eager splices never mix device sets."""
+        return NamedSharding(self.mesh, P())
+
+    def batch_sharding(self, ndim: int = 1) -> NamedSharding:
+        """Per-slot vector/matrix sharding ([B] or [B, ...]): leading dim
+        over DP."""
+        spec = [self.dp_axes or None] + [None] * (ndim - 1)
+        return NamedSharding(self.mesh, P(*spec))
+
+    def to_mesh(self, tree: PyTree) -> PyTree:
+        """Replicate a host/single-device pytree onto every mesh device."""
+        return jax.device_put(tree, self.replicated())
+
+    # -- identity ----------------------------------------------------------
+
+    def key(self) -> tuple:
+        """Hashable descriptor for compilation/synthesis cache keys: two
+        plans compile identically iff their meshes have the same axis
+        names, shape, and device assignment."""
+        return (tuple(self.mesh.axis_names),
+                tuple(self.mesh.devices.shape),
+                tuple(int(d.id) for d in self.mesh.devices.flat),
+                self.fold_data)
+
+    def describe(self) -> dict:
+        return {"dp": self.dp, "tp": self.tp,
+                "axes": dict(self.mesh.shape),
+                "devices": int(self.mesh.devices.size),
+                "layout": "folded" if self.fold_data else "sharded"}
+
+
+def make_shard_plan(mesh: Mesh | None) -> ShardPlan | None:
+    """``None``-propagating constructor (the server/CLI entry point)."""
+    return None if mesh is None else ShardPlan(mesh)
+
+
+__all__ = ["ShardPlan", "make_shard_plan"]

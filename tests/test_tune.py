@@ -85,7 +85,14 @@ def test_candidate_key_and_cache_key_roundtrip():
     assert cand.key == "lstm_2i_1x4_2o|pallas|u2|c1|q8|db0"
     ck = _cache_key(cand.spec, 2, cand.backend, cand.double_buffer,
                     cand.chunk, cand.block_b)
-    assert ck == (cand.spec, 2, "pallas", False, None, None)
+    assert ck == (cand.spec, 2, "pallas", False, None, None, None)
+    # a meshed compile keys by the ShardPlan identity — never aliases unmeshed
+    mesh = pytest.importorskip("repro.launch.mesh")
+    if len(mesh.jax.devices()) >= 2:
+        ck_mesh = _cache_key(cand.spec, 2, cand.backend, cand.double_buffer,
+                             cand.chunk, cand.block_b,
+                             mesh=mesh.make_local_mesh(dp=2, tp=1))
+        assert ck_mesh != ck and ck_mesh[-1] is not None
     kw = cand.synth_kwargs()
     assert kw == {"backend": "pallas", "double_buffer": False,
                   "chunk": None, "block_b": None}
@@ -169,7 +176,7 @@ def test_measure_budget_baseline_and_best_selection():
     # cache key is still the reproducible handle
     assert result.report is None
     assert result.cache_key == (result.best.cand.spec, 2, "xla", True,
-                                None, None)
+                                None, None, None)
     # measured list sorted by objective; pareto front non-empty subset
     objs = [s.measured["objective"] for s in result.measured]
     assert objs == sorted(objs)

@@ -51,16 +51,32 @@ def run(out_dir: str = "experiments", smoke: bool = False) -> dict:
     budget = 3 if smoke else 6
     runs = []
     for name, spec in _case_studies(smoke):
+        # unpruned reference pass, then the analyzer-pruned pass the doc
+        # records.  synthesize() memoizes the measure compiles and the obs
+        # ledger row is reused, so both passes see identical measurements —
+        # a winner flip could only come from the pruner itself.
+        reference = tune(spec, optimize="latency", budget=budget, batch=2,
+                         space_kwargs=space_kwargs)
         result = tune(spec, optimize="latency", budget=budget, batch=2,
-                      space_kwargs=space_kwargs)
+                      space_kwargs=space_kwargs, analyze_prune=True)
+        if result.best.key != reference.best.key:
+            raise AssertionError(
+                f"{name}: analyzer pruning changed the winner "
+                f"({reference.best.key} -> {result.best.key}) — the pruner "
+                "dropped a sound candidate")
         doc = result_doc(result)
         doc["bench"] = name
+        doc["candidates_unpruned"] = len(reference.scored)
+        doc["candidates_after_prune"] = len(result.scored)
+        doc["pruned"] = len(reference.scored) - len(result.scored)
+        doc["winner_unchanged"] = True
         runs.append(doc)
         best = result.best
         emit(name, (best.measured or {}).get("wall_us", 0.0),
              f"best={best.key} validated={best.validated} "
              f"speedup={result.speedup and f'{result.speedup:.2f}x' or 'n/a'} "
-             f"front={len(result.pareto)}")
+             f"front={len(result.pareto)} "
+             f"pruned={doc['pruned']}/{doc['candidates_unpruned']}")
         print(result.table())
     payload = {"schema": "repro.tune/v1", "suite": "tune", "smoke": smoke,
                "runs": runs}

@@ -1,0 +1,277 @@
+"""Word-space interval domain for the fixed-point datapath.
+
+The analyzer proves per-bus-lane bounds on the **signed words** the emitted
+RTL computes — the same ``Q(4.W-4)`` two's-complement words
+:mod:`repro.codegen.rtlsim` simulates — so "can this wrap?" is answered in
+the exact arithmetic the hardware performs, not in a float approximation.
+
+Every transfer function here mirrors one rtlsim primitive and is **sound**:
+if each input word lies in its input interval, the output word lies in the
+output interval.  Two facts carry the load:
+
+* the serial MACC's per-cycle 2W-bit wraps compose to a single wrap of the
+  exact sum (wrap is a ring homomorphism mod ``2^(2W)``), so bounding the
+  exact accumulator sum and checking it against ``±2^(2W-1)`` is exact —
+  when the bound fits, no intermediate wrap happened either;
+* the Create_AF address (:func:`repro.codegen.rtlsim.af_addr`) is monotone
+  nondecreasing in its input *including* the clamp, so the ROM words
+  reachable from an interval are exactly the slice
+  ``rom[addr(lo) .. addr(hi)]`` — which keeps sigmoid gate bounds strictly
+  inside ``[0, scale]`` instead of the useless full word range.
+
+Whenever a bound escapes its word range the lane is **widened** to the full
+word range (still sound — a wrapped value is *some* word) and a flag is
+raised via the ``flag(kind, lanes, detail)`` callback; the range driver
+turns flags into :class:`repro.analyze.report.Finding`\\ s with step/stage
+context.  All arithmetic is Python-int exact — no int64 overflow at any
+width/fan-in.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.codegen.verilog import AF_ADDR_BITS
+
+FlagFn = Callable[[str, list[int], str], None]
+
+
+def _no_flag(_kind: str, _lanes: list[int], _detail: str) -> None:
+    return None
+
+
+def word_min(bits: int) -> int:
+    return -(1 << (bits - 1))
+
+
+def word_max(bits: int) -> int:
+    return (1 << (bits - 1)) - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class Bd:
+    """Per-lane closed interval of signed words: lane i ∈ [lo[i], hi[i]]."""
+
+    lo: tuple[int, ...]
+    hi: tuple[int, ...]
+
+    def __post_init__(self):
+        if len(self.lo) != len(self.hi):
+            raise ValueError("lo/hi lane mismatch")
+
+    @property
+    def lanes(self) -> int:
+        return len(self.lo)
+
+    @classmethod
+    def point(cls, vals: Sequence[int]) -> "Bd":
+        t = tuple(int(v) for v in vals)
+        return cls(t, t)
+
+    @classmethod
+    def span(cls, lo: int, hi: int, lanes: int) -> "Bd":
+        return cls((int(lo),) * lanes, (int(hi),) * lanes)
+
+    @classmethod
+    def full(cls, width: int, lanes: int) -> "Bd":
+        return cls.span(word_min(width), word_max(width), lanes)
+
+    def join(self, other: "Bd") -> "Bd":
+        return Bd(tuple(min(a, b) for a, b in zip(self.lo, other.lo)),
+                  tuple(max(a, b) for a, b in zip(self.hi, other.hi)))
+
+    def contains(self, other: "Bd") -> bool:
+        return all(sl <= ol and oh <= sh
+                   for sl, ol, oh, sh
+                   in zip(self.lo, other.lo, other.hi, self.hi))
+
+    def contains_values(self, lo_obs, hi_obs) -> bool:
+        """Do observed per-lane extremes (e.g. rtlsim ``wire_ranges``) lie
+        inside the proven interval?"""
+        return all(sl <= int(ol) and int(oh) <= sh
+                   for sl, ol, oh, sh in zip(self.lo, lo_obs, hi_obs, self.hi))
+
+    def amp(self) -> int:
+        """Largest absolute word over all lanes."""
+        return max(max(abs(a), abs(b)) for a, b in zip(self.lo, self.hi))
+
+
+def _range_check(lo: list[int], hi: list[int], bits: int, kind: str,
+                 flag: FlagFn) -> tuple[list[int], list[int]]:
+    """Clamp-or-flag: lanes whose bound escapes the ``bits``-wide word range
+    are widened to the full range (a wrapped word is still some word) and
+    reported under ``kind``."""
+    wmin, wmax = word_min(bits), word_max(bits)
+    bad = [i for i in range(len(lo)) if lo[i] < wmin or hi[i] > wmax]
+    if bad:
+        worst = max(max(abs(lo[i]), abs(hi[i])) for i in bad)
+        flag(kind, bad, f"{len(bad)}/{len(lo)} lane(s) reach |{worst}| "
+             f"vs ±2^{bits - 1} at {bits} bits")
+        for i in bad:
+            lo[i], hi[i] = wmin, wmax
+    return lo, hi
+
+
+def _qalign(lo: list[int], hi: list[int], width: int,
+            flag: FlagFn) -> tuple[list[int], list[int]]:
+    """The ``[2W-5 -: W]`` result select: arithmetic >> (W-4) — floor
+    division, exact on interval endpoints — then the W-bit wrap check."""
+    s = width - 4
+    lo = [v >> s for v in lo]
+    hi = [v >> s for v in hi]
+    return _range_check(lo, hi, width, "qalign-clip", flag)
+
+
+def macc_bd(x: Bd, w_rows: Sequence[Sequence[int]], width: int,
+            bias: Bd | None = None, flag: FlagFn = _no_flag) -> Bd:
+    """Create_Layer transfer: interval of the exact accumulator sum, checked
+    against the 2W register (``acc-wrap``), Q-aligned (``qalign-clip``),
+    plus the W-bit bias add (``bias-wrap``).
+
+    ``w_rows`` is the quantized weight ROM as ``[in][out]`` signed words —
+    the same orientation ``rtlsim.macc_layer`` consumes.
+    """
+    n_in = len(w_rows)
+    n_out = len(w_rows[0]) if n_in else (bias.lanes if bias is not None else 0)
+    lo2 = [0] * n_out
+    hi2 = [0] * n_out
+    for i in range(n_in):
+        xl, xh = x.lo[i], x.hi[i]
+        row = w_rows[i]
+        for j in range(n_out):
+            a = xl * row[j]
+            b = xh * row[j]
+            if a > b:
+                a, b = b, a
+            lo2[j] += a
+            hi2[j] += b
+    lo2, hi2 = _range_check(lo2, hi2, 2 * width, "acc-wrap", flag)
+    lo, hi = _qalign(lo2, hi2, width, flag)
+    if bias is not None:
+        lo = [v + b for v, b in zip(lo, bias.lo)]
+        hi = [v + b for v, b in zip(hi, bias.hi)]
+        lo, hi = _range_check(lo, hi, width, "bias-wrap", flag)
+    return Bd(tuple(lo), tuple(hi))
+
+
+def af_addr_int(v: int, width: int) -> int:
+    """Pure-int mirror of :func:`repro.codegen.rtlsim.af_addr` (one word)."""
+    biased = v + (1 << (width - 2))
+    if biased < 0:
+        return 0
+    if biased >= (1 << (width - 1)):
+        return (1 << AF_ADDR_BITS) - 1
+    return biased >> (width - 2 - (AF_ADDR_BITS - 1))
+
+
+def af_bd(x: Bd, fn: str, rom: Sequence[int] | None, width: int,
+          flag: FlagFn = _no_flag) -> Bd:
+    """Create_AF transfer.  ROM functions bound via the reachable-address
+    slice (monotone address ⇒ exactly ``rom[addr(lo)..addr(hi)]``); lanes
+    whose interval pokes outside the ROM domain ``[-2^(W-2), 2^(W-2))``
+    read the clamped end entries — sound, but flagged ``af-domain`` because
+    the saturation silently flattens the activation."""
+    if fn == "identity":
+        return x
+    if fn == "relu":
+        return Bd(tuple(max(0, v) for v in x.lo),
+                  tuple(max(0, v) for v in x.hi))
+    assert rom is not None, f"af '{fn}' needs its ROM words"
+    half = 1 << (width - 2)
+    lo, hi, outside = [], [], []
+    for i in range(x.lanes):
+        seg = rom[af_addr_int(x.lo[i], width):af_addr_int(x.hi[i], width) + 1]
+        lo.append(min(seg))
+        hi.append(max(seg))
+        if x.lo[i] < -half or x.hi[i] >= half:
+            outside.append(i)
+    if outside:
+        flag("af-domain", outside,
+             f"{len(outside)}/{x.lanes} lane(s) can leave the {fn} ROM "
+             f"domain [-2^{width - 2}, 2^{width - 2}) — clamped to the end "
+             "entries")
+    return Bd(tuple(lo), tuple(hi))
+
+
+def af_domain_lanes(x: Bd, width: int,
+                    entire: bool = False) -> list[int]:
+    """Lanes whose interval leaves the AF ROM domain; with ``entire=True``
+    only lanes whose WHOLE interval is outside (the always-saturating case
+    ``ir.Stage.validate`` rejects)."""
+    half = 1 << (width - 2)
+    if entire:
+        return [i for i in range(x.lanes)
+                if x.hi[i] < -half or x.lo[i] >= half]
+    return [i for i in range(x.lanes)
+            if x.lo[i] < -half or x.hi[i] >= half]
+
+
+def mul_bd(a: Bd, b: Bd, width: int, flag: FlagFn = _no_flag) -> Bd:
+    """Gate-algebra ``mul``: 4-corner product interval on the 2W lane
+    product (``mul-wrap``), then the same Q-align select as the MACC."""
+    lo2, hi2 = [], []
+    for i in range(a.lanes):
+        c = (a.lo[i] * b.lo[i], a.lo[i] * b.hi[i],
+             a.hi[i] * b.lo[i], a.hi[i] * b.hi[i])
+        lo2.append(min(c))
+        hi2.append(max(c))
+    lo2, hi2 = _range_check(lo2, hi2, 2 * width, "mul-wrap", flag)
+    lo, hi = _qalign(lo2, hi2, width, flag)
+    return Bd(tuple(lo), tuple(hi))
+
+
+def addsub_bd(op: str, a: Bd, b: Bd, width: int,
+              flag: FlagFn = _no_flag) -> Bd:
+    """Gate-algebra ``add``/``sub`` at W bits (``add-wrap``/``sub-wrap``)."""
+    if op == "add":
+        lo = [x + y for x, y in zip(a.lo, b.lo)]
+        hi = [x + y for x, y in zip(a.hi, b.hi)]
+    else:
+        lo = [x - y for x, y in zip(a.lo, b.hi)]
+        hi = [x - y for x, y in zip(a.hi, b.lo)]
+    lo, hi = _range_check(lo, hi, width, f"{op}-wrap", flag)
+    return Bd(tuple(lo), tuple(hi))
+
+
+def addsub_raw(op: str, a: Bd, b: Bd) -> tuple[list[int], list[int]]:
+    """Pre-wrap-check add/sub bounds (the lerp refinement needs them)."""
+    if op == "add":
+        return ([x + y for x, y in zip(a.lo, b.lo)],
+                [x + y for x, y in zip(a.hi, b.hi)])
+    return ([x - y for x, y in zip(a.lo, b.hi)],
+            [x - y for x, y in zip(a.hi, b.lo)])
+
+
+def lerp_lanes(a: Bd, x: Bd, z: Bd, width: int) -> list[int]:
+    """Lanes where ``add(a, mul(z, sub(x, a)))`` provably stays in
+    ``hull(a, x)`` — the GRU write-back ``h' = n + z·(h − n)``.
+
+    Per lane, with ``t = z/scale ∈ [0, 1]`` and ``d = x − a`` unwrapped,
+    the result is ``a + floor(t·d)``; for integer ``d`` that floor lies in
+    ``[min(0, d), max(0, d)]``, so the sum lies in ``hull(a, x)`` exactly —
+    naive interval arithmetic loses the ``x``/``a`` correlation and
+    diverges on every GRU.  Conditions per lane: ``0 ≤ z ≤ scale`` and the
+    ``sub`` cannot wrap.
+    """
+    scale = 1 << (width - 4)
+    wmin, wmax = word_min(width), word_max(width)
+    return [i for i in range(a.lanes)
+            if 0 <= z.lo[i] and z.hi[i] <= scale
+            and x.lo[i] - a.hi[i] >= wmin and x.hi[i] - a.lo[i] <= wmax]
+
+
+__all__ = [
+    "Bd",
+    "FlagFn",
+    "addsub_bd",
+    "addsub_raw",
+    "af_addr_int",
+    "af_bd",
+    "af_domain_lanes",
+    "lerp_lanes",
+    "macc_bd",
+    "mul_bd",
+    "word_max",
+    "word_min",
+]

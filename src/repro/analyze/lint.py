@@ -1,0 +1,185 @@
+"""Codebase lint suite — jit-safety and metrics-name drift.
+
+Two classes of rot this repo has actually hit, checked statically:
+
+**jit-safety** (``lint_jit_safety``): observability and host-sync calls
+inside jit-traced closures.  The Pallas backend's contract (see the
+comment in ``codegen/pallas_backend.py``) is that obs/tracer calls happen
+at *compile* time, at the enclosing-function level — NEVER inside the
+nested ``kernel()``/``run()`` closures that jit re-traces, where a
+``counter()`` bump would either crash on tracers or silently record
+nothing per call.  The lint walks the AST of ``kernels/`` and
+``codegen/pallas_backend.py`` and flags calls **inside nested function
+definitions** (the traced-closure idiom) whose target is an obs chain
+(``OBS…``, ``obs_lib…``, ``_O…``, ``log…``), a wall-clock read
+(``time.…``), a host sync (``….block_until_ready``), or ``print``.
+
+**metrics drift** (``lint_metrics_drift``): counter/gauge/histogram names
+referenced by ``obs/check.py`` or tests via snapshot subscripts
+(``snap["counters"]["name"]``) that no ``registry.counter("name", …)``
+call ever registers — assertions that can only ever KeyError or silently
+``.get(…, 0)`` their way past a renamed metric.
+
+Both accept raw source strings (test fixtures) or walk the tree on disk.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+
+from .report import Finding
+
+#: roots of attribute chains that mean "observability / logging" here
+_OBS_ROOTS = {"OBS", "obs", "obs_lib", "_O", "log", "logger"}
+#: time.<attr> calls that read the host clock
+_TIME_ATTRS = {"sleep", "time", "perf_counter", "monotonic", "process_time"}
+#: attributes that force a host sync wherever they appear
+_SYNC_ATTRS = {"block_until_ready"}
+
+_REG_RE = re.compile(
+    r"\.(counter|gauge|histogram)\(\s*[\"']([A-Za-z0-9_./-]+)[\"']")
+_REF_RE = re.compile(
+    r"\[[\"'](counters|gauges|histograms)[\"']\]"
+    r"(?:\[[\"']([^\"']+)[\"']\]|\.get\(\s*[\"']([^\"']+)[\"'])")
+
+
+def _chain(node: ast.AST) -> str | None:
+    """``a.b.c`` attribute chain as a dotted string, or None."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def _unsafe_reason(call: ast.Call) -> str | None:
+    chain = _chain(call.func)
+    if chain is None:
+        return None
+    parts = chain.split(".")
+    root, leaf = parts[0], parts[-1]
+    if root in _OBS_ROOTS and len(parts) > 1:
+        return f"obs call '{chain}' inside a traced closure"
+    if root == "time" and leaf in _TIME_ATTRS:
+        return f"host clock '{chain}' inside a traced closure"
+    if leaf in _SYNC_ATTRS:
+        return f"host sync '{chain}' inside a traced closure"
+    if chain == "print":
+        return "print() inside a traced closure"
+    return None
+
+
+class _JitVisitor(ast.NodeVisitor):
+    def __init__(self, path: str):
+        self.path = path
+        self.depth = 0          # function-def nesting depth
+        self.stack: list[str] = []
+        self.findings: list[Finding] = []
+
+    def _visit_fn(self, node):
+        self.depth += 1
+        self.stack.append(node.name)
+        self.generic_visit(node)
+        self.stack.pop()
+        self.depth -= 1
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    def visit_Call(self, node: ast.Call):
+        # depth >= 2 ⇒ we are inside a function nested in a function — the
+        # kernel()/run() closure idiom jit re-traces; enclosing-level obs
+        # calls (depth 1) are the sanctioned compile-time pattern
+        if self.depth >= 2:
+            reason = _unsafe_reason(node)
+            if reason is not None:
+                chain = _chain(node.func) or "<call>"
+                self.findings.append(Finding(
+                    kind="jit-unsafe-call", severity="error",
+                    stage=self.path, node=f"{self.stack[-1]}.{chain}",
+                    detail=f"{reason} (line {node.lineno}) — hoist to the "
+                    "enclosing compile-time scope"))
+        self.generic_visit(node)
+
+
+def lint_jit_safety(sources: dict[str, str]) -> list[Finding]:
+    """``{path: source}`` → jit-safety findings."""
+    out: list[Finding] = []
+    for path, src in sorted(sources.items()):
+        try:
+            tree = ast.parse(src)
+        except SyntaxError as exc:
+            out.append(Finding(kind="jit-unsafe-call", severity="error",
+                               stage=path, node="<parse>",
+                               detail=f"source does not parse: {exc}"))
+            continue
+        v = _JitVisitor(path)
+        v.visit(tree)
+        out.extend(v.findings)
+    return out
+
+
+def lint_metrics_drift(registry_sources: dict[str, str],
+                       reference_sources: dict[str, str]) -> list[Finding]:
+    """Names referenced via snapshot subscripts but never registered."""
+    registered: set[str] = set()
+    for src in registry_sources.values():
+        for _kind, name in _REG_RE.findall(src):
+            registered.add(name)
+    out: list[Finding] = []
+    seen: set[tuple[str, str]] = set()
+    for path, src in sorted(reference_sources.items()):
+        for m in _REF_RE.finditer(src):
+            kind = m.group(1)
+            name = (m.group(2) or m.group(3)).split("{", 1)[0]
+            if name in registered or (path, name) in seen:
+                continue
+            seen.add((path, name))
+            out.append(Finding(
+                kind="metrics-drift", severity="error", stage=path,
+                node=name,
+                detail=f"snapshot {kind}[{name!r}] is referenced here but "
+                "no registry call registers that name"))
+    return out
+
+
+def _read_tree(root: str, suffix: str = ".py") -> dict[str, str]:
+    srcs: dict[str, str] = {}
+    for dirpath, _dirs, files in os.walk(root):
+        for f in sorted(files):
+            if f.endswith(suffix):
+                path = os.path.join(dirpath, f)
+                with open(path, encoding="utf-8") as fh:
+                    srcs[path] = fh.read()
+    return srcs
+
+
+def lint_src(repo_root: str = ".") -> list[Finding]:
+    """The ``--lint-src`` entry: jit-safety over ``src/repro/kernels`` +
+    ``src/repro/codegen/pallas_backend.py``, metrics drift over the whole
+    of ``src/repro`` + ``tests``."""
+    src_root = os.path.join(repo_root, "src", "repro")
+    jit_sources = _read_tree(os.path.join(src_root, "kernels"))
+    pb = os.path.join(src_root, "codegen", "pallas_backend.py")
+    if os.path.exists(pb):
+        with open(pb, encoding="utf-8") as fh:
+            jit_sources[pb] = fh.read()
+    findings = lint_jit_safety(jit_sources)
+
+    registry = _read_tree(src_root)
+    registry.update(_read_tree(os.path.join(repo_root, "tests")))
+    refs = {}
+    check_py = os.path.join(src_root, "obs", "check.py")
+    if check_py in registry:
+        refs[check_py] = registry[check_py]
+    refs.update(_read_tree(os.path.join(repo_root, "tests")))
+    findings.extend(lint_metrics_drift(registry, refs))
+    return findings
+
+
+__all__ = ["lint_jit_safety", "lint_metrics_drift", "lint_src"]

@@ -264,6 +264,19 @@ class Stage:
                 raise ValueError(
                     f"stage '{self.name}': const '{n.name}' shape {got} != {want}"
                 )
+        if self.graph.af_nodes():
+            # static AF-domain check (repro.analyze interval primitives): an
+            # AF node whose input interval lies ENTIRELY outside the 64-entry
+            # ROM's addressable domain [-2^(W-2), 2^(W-2)) can only ever read
+            # a clamped edge entry — a wiring bug, not a quantization choice
+            from repro.analyze.ranges import af_domain_violations
+
+            bad = af_domain_violations(self, width=None, max_iters=8)
+            if bad:
+                raise ValueError(
+                    f"stage '{self.name}': AF node(s) {sorted(bad)} have "
+                    f"input bounds entirely outside the ROM domain — every "
+                    f"lookup would clamp to an edge entry")
 
 
 @dataclasses.dataclass

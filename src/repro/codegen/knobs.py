@@ -16,6 +16,29 @@ from __future__ import annotations
 
 import functools
 
+# ---------------------------------------------------------------------------
+# Word-width validity: the ONE table every width check imports.
+#
+# The fixed-point word length is bounded below by the AF address select
+# (Create_AF reads bits [W-2 -: AF_ADDR_BITS], so W-2 >= AF_ADDR_BITS) and
+# above by int64 exactness of the simulators (2W-bit products/accumulators
+# must fit a signed 64-bit word).  rtlsim, the Verilog emitter, the
+# fixed-point golden model, the tuner's enumeration filter, and the static
+# analyzer all consume these instead of re-stating the rule.
+# ---------------------------------------------------------------------------
+WORD_BITS_MIN = 8
+WORD_BITS_MAX = 32
+
+
+def word_bits_reason(bits: int) -> str | None:
+    """Why ``bits`` is not a legal fixed-point word width — or None."""
+    if not WORD_BITS_MIN <= bits <= WORD_BITS_MAX:
+        return (f"word width {bits} outside rtlsim's [{WORD_BITS_MIN}, "
+                f"{WORD_BITS_MAX}] (AF addr select needs W-2 >= 6 bits; "
+                "2W-bit accumulators must stay exact in int64)")
+    return None
+
+
 # Default search grid per knob — deliberately small: the predict pass is
 # cheap but the measure pass compiles, so the default space stays a few
 # dozen candidates wide.  Callers override any axis.
@@ -48,11 +71,11 @@ def quant_reason(backend: str, cell: str, bits: int | None) -> str | None:
     it is valid.  Mirrors ``synthesis._quant_analysis`` exactly."""
     if bits is None:
         return None
-    if not 8 <= bits <= 32:
-        # every tuner candidate must be difftest-validatable, and the bit
-        # path (rtlsim vs golden model) only exists for widths in [8, 32]
-        return (f"quant_bits={bits} outside rtlsim's verifiable word range "
-                "[8, 32]")
+    # every tuner candidate must be difftest-validatable, and the bit path
+    # (rtlsim vs golden model) only exists for legal word widths
+    reason = word_bits_reason(bits)
+    if reason is not None:
+        return f"quant_bits={bits} is not verifiable: {reason}"
     if cell == "mlp":
         return None  # fixed-point SNR analysis runs on every backend
     if backend == "xla":
@@ -105,6 +128,9 @@ def normalize_pallas_knobs(backend: str, double_buffer: bool,
 
 
 __all__ = [
+    "WORD_BITS_MAX",
+    "WORD_BITS_MIN",
+    "word_bits_reason",
     "DEFAULT_BLOCK_B",
     "DEFAULT_C_SLOW",
     "DEFAULT_CHUNK",

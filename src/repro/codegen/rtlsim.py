@@ -54,6 +54,7 @@ import numpy as np
 from repro.core.quantization import FixedPointFormat, default_format
 
 from .ir import DatapathGraph, Program, Stage
+from .knobs import WORD_BITS_MIN, word_bits_reason
 from .verilog import (
     AF_ADDR_BITS,
     DEFAULT_WIDTH,
@@ -63,7 +64,7 @@ from .verilog import (
     _quantize_words,
 )
 
-MIN_WIDTH = 8  # AF addr select reads bits [W-2 -: AF_ADDR_BITS]; W-2 >= 6
+MIN_WIDTH = WORD_BITS_MIN  # one shared width table (codegen.knobs)
 
 
 # ---------------------------------------------------------------------------
@@ -101,16 +102,22 @@ def macc_word(acc: np.ndarray, width: int) -> np.ndarray:
     return wrap(acc >> np.int64(width - 4), width)
 
 
-def af_lookup(x: np.ndarray, rom: np.ndarray, width: int) -> np.ndarray:
+def af_addr(x: np.ndarray, width: int) -> np.ndarray:
     """Create_AF address computation, bit-for-bit: sign-extend, bias by
-    ``1 << (W-2)`` (= +R in Q), clamp, take the top AF_ADDR_BITS bits."""
+    ``1 << (W-2)`` (= +R in Q), clamp, take the top AF_ADDR_BITS bits.
+    Monotone nondecreasing in ``x`` — the property the static range
+    analyzer's address-restricted ROM bounds rely on."""
     biased = np.asarray(x, np.int64) + (np.int64(1) << np.int64(width - 2))
     n = 1 << AF_ADDR_BITS
     addr = biased >> np.int64(width - 2 - (AF_ADDR_BITS - 1))  # [W-2 -: 6]
-    addr = np.where(biased < 0, 0,
+    return np.where(biased < 0, 0,
                     np.where(biased >= (np.int64(1) << np.int64(width - 1)),
                              n - 1, addr))
-    return rom[addr]
+
+
+def af_lookup(x: np.ndarray, rom: np.ndarray, width: int) -> np.ndarray:
+    """Create_AF ROM read at the bit-accurate address."""
+    return rom[af_addr(x, width)]
 
 
 # ---------------------------------------------------------------------------
@@ -182,13 +189,29 @@ class QuantStage:
                    width=fmt.total_bits)
 
 
+def _watch_update(watch: dict, key: str, vals: np.ndarray) -> None:
+    """Fold observed words into ``watch[key] = (lo, hi)`` per bus lane —
+    min/max reduced over every leading (batch/stream) axis so the record
+    matches the static analyzer's per-lane intervals."""
+    v = np.asarray(vals, np.int64).reshape(-1, np.asarray(vals).shape[-1])
+    lo, hi = v.min(axis=0), v.max(axis=0)
+    prev = watch.get(key)
+    if prev is not None:
+        lo, hi = np.minimum(prev[0], lo), np.maximum(prev[1], hi)
+    watch[key] = (lo, hi)
+
+
 def step_graph(q: QuantStage, states: dict[str, np.ndarray],
-               u: np.ndarray | None, k: int, unroll: int = 1):
+               u: np.ndarray | None, k: int, unroll: int = 1,
+               watch: dict | None = None):
     """One FSM step of one datapath, word-for-word.
 
     ``states`` leaves and ``u`` are ``[..., width]`` signed words.  Returns
     ``(new_states, output_words or None)`` — the register write-back values
-    and the Mealy output bus after the step settles.
+    and the Mealy output bus after the step settles.  When ``watch`` is a
+    dict, every settled bus value is folded into it as a per-lane
+    (min, max) record keyed ``'{stage}.{node}'`` (difftest ``--trace-ranges``
+    uses this to falsify the static analyzer's proven bounds).
     """
     g, W = q.stage.graph, q.width
     env: dict[str, np.ndarray] = {}
@@ -231,6 +254,11 @@ def step_graph(q: QuantStage, states: dict[str, np.ndarray],
             env[n.name] = _elementwise(n.op, a, b, W)
         else:  # pragma: no cover - graph.validate() rejects earlier
             raise ValueError(f"unknown op {n.op}")
+    if watch is not None:
+        for n in g.nodes:
+            if n.op == "const":
+                continue  # ROM words are static; the analyzer reads them
+            _watch_update(watch, f"{q.stage.name}.{n.name}", env[n.name])
     new_states = {s: env[src] for s, src in g.updates.items()}
     out = env[g.output] if g.output is not None else None
     return new_states, out
@@ -254,6 +282,9 @@ class RtlSimResult:
     # injected single-event upsets ({stream, step, stage, state, index, bit}
     # per flip) — empty unless a fault plan watching 'rtlsim.seu' was active
     seu_flips: list = dataclasses.field(default_factory=list)
+    # 'stage.node' -> (lo, hi) observed signed words per bus lane, plus the
+    # virtual wires 'inject.x0' / 'readout.y'; None unless collect_ranges
+    wire_ranges: dict | None = None
 
 
 def _stage_serial(graph: DatapathGraph, unroll: int) -> int:
@@ -321,7 +352,7 @@ def _seu_flip(plan, spec_f, states, qstages, width: int,
 
 
 def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
-             collect_states: bool = False,
+             collect_ranges: bool = False,
              fault_plan=None) -> RtlSimResult:
     """Run the emitted Create_TopModule, bit-accurately, on real inputs.
 
@@ -342,11 +373,9 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
     program.validate()
     spec = program.spec
     W = width if width is not None else (spec.quant_bits or DEFAULT_WIDTH)
-    if W < MIN_WIDTH or W > 32:
-        raise ValueError(
-            f"rtlsim requires {MIN_WIDTH} <= width <= 32 (AF addr select "
-            f"needs W-2 >= {AF_ADDR_BITS - 1} bits; words wrap in int64); "
-            f"got {W}")
+    reason = word_bits_reason(W)
+    if reason is not None:
+        raise ValueError(f"rtlsim: {reason}")
     fmt = default_format(W)
     qstages = [QuantStage.build(st, fmt) for st in program.stages]
     is_mlp = program.beta is not None
@@ -369,6 +398,7 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
     plan = _seu_plan(fault_plan)
     seu_watch = plan is not None and plan.watches("rtlsim.seu")
     seu_flips: list[dict] = []
+    watch: dict | None = {} if collect_ranges else None
 
     ys, finals = [], {}
     cycles = 0
@@ -379,6 +409,8 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
             x = macc_layer(u_q, beta_rom.T, W)
             states = [{name: x for name in qstages[0].stage.graph.states}]
             T = steps
+            if watch is not None:
+                _watch_update(watch, "inject.x0", x)
         else:
             states = [{name: np.zeros(u_q.shape[:-2] + (w_,), np.int64)
                        for name, w_ in q.stage.graph.states.items()}
@@ -388,7 +420,7 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
             bus = None if is_mlp else u_q[..., k, :]
             for si, q in enumerate(qstages):
                 new_states, out = step_graph(q, states[si], bus, k,
-                                             unroll=unroll)
+                                             unroll=unroll, watch=watch)
                 states[si] = new_states
                 bus = out
             if seu_watch:
@@ -398,6 +430,11 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
                                                qstages, W, ci, k))
         x_final = states[-1][program.readout_state]
         y = macc_layer(x_final, C_rom.T, W)
+        if watch is not None:
+            _watch_update(watch, "readout.y", y)
+            for q, st in zip(qstages, states):  # final write-back values
+                for name, v in st.items():
+                    _watch_update(watch, f"{q.stage.name}.{name}", v)
         cycles += _fsm_cycles_per_stream(program, unroll, T, is_mlp)
         ys.append(y)
         finals = {f"{q.stage.name}.{name}": v
@@ -412,6 +449,7 @@ def simulate(program: Program, u: np.ndarray, *, width: int | None = None,
         width=W,
         fmt=fmt,
         seu_flips=seu_flips,
+        wire_ranges=watch,
     )
 
 
@@ -436,6 +474,7 @@ __all__ = [
     "MIN_WIDTH",
     "QuantStage",
     "RtlSimResult",
+    "af_addr",
     "af_lookup",
     "fsm_cycle_estimate",
     "af_rom",

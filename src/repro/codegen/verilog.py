@@ -31,6 +31,7 @@ from repro.kernels._lut import RANGE as _AF_RANGE  # ROM domain [-R, R): one
 # constant shared with the Pallas LUT path, so the two §IV-B tables agree
 
 from .ir import DatapathGraph, Program, Stage
+from .knobs import word_bits_reason
 
 DEFAULT_WIDTH = 18
 AF_ADDR_BITS = 6  # 64-entry activation ROMs (paper §IV-B; small for golden files)
@@ -618,10 +619,9 @@ def emit_program(program: Program) -> str:
     program.validate()
     spec = program.spec
     width = spec.quant_bits or DEFAULT_WIDTH
-    if width < 8 or width > 32:
-        raise ValueError(
-            f"verilog backend requires 8 <= quant_bits <= 32 (AF addr select "
-            f"reads bits [WIDTH-2 -: {AF_ADDR_BITS}]); got {width}")
+    reason = word_bits_reason(width)
+    if reason is not None:
+        raise ValueError(f"verilog backend: quant_bits={width}: {reason}")
     parts = [
         f"// Generated by repro.codegen (paper Table I) — spec {spec.name}",
         f"// cell={spec.cell} steps={sum(st.schedule.steps for st in program.stages)} "

@@ -194,6 +194,8 @@ class SynthesisReport:
     resources: Any = None               # backend="verilog": codegen.ResourceReport
     quant: dict | None = None           # quant_bits analysis (SNR / LUT mode)
     fallback_from: str | None = None    # requested backend, when degraded
+    analysis: dict | None = None        # synthesize(analyze=True): the
+    #                                     repro.analyze/v1 result document
 
     def summary(self) -> str:
         extra = ""
@@ -338,14 +340,14 @@ def _analyze_compiled(fwd, params, u: jax.ShapeDtypeStruct):
         # None (not NaN) when the backend reports nothing — keeps the
         # `if flops` / `is None` consumers honest (NaN is truthy)
         flops = float(cost["flops"]) if "flops" in cost else None
-    except Exception:
+    except Exception:  # noqa: BLE001 — cost analysis is advisory
         flops = None
     try:
         mem = compiled.memory_analysis()
         peak = int(getattr(mem, "temp_size_in_bytes", 0)) + int(
             getattr(mem, "argument_size_in_bytes", 0)
         )
-    except Exception:
+    except Exception:  # noqa: BLE001 — memory analysis is advisory
         peak = None
     return t1 - t0, t2 - t1, len(lowered.as_text()), flops, peak, compiled
 
@@ -364,7 +366,7 @@ def _measure_compiled(compiled, params, u_shape, key: str) -> None:
                 t0 = time.perf_counter()
                 jax.block_until_ready(compiled(params, u0))
                 O.ledger.measure(key, time.perf_counter() - t0)
-    except Exception:
+    except Exception:  # noqa: BLE001
         # measurement is telemetry, never a synthesis failure (e.g. AOT
         # executables that reject host arrays on exotic backends)
         pass
@@ -445,6 +447,24 @@ def _build_fwd(program, spec: NetworkSpec, backend: str, quant: dict | None,
     return codegen.xla_backend.compile_program(program, mesh=xmesh), params
 
 
+def _static_gate(spec: NetworkSpec, program, waivers, O) -> dict:
+    """``synthesize(analyze=True)``: run :mod:`repro.analyze` on the IR and
+    raise :class:`repro.analyze.AnalysisError` on unwaived error findings —
+    purely static, before (and regardless of) any backend compile."""
+    from repro import codegen
+    from repro.analyze import analyze_program, gate
+
+    if program is None:                 # cache-hit path: rebuild (cheap)
+        program = codegen.build_program(spec)
+    with O.tracer.span("synth.analyze", cat="synth",
+                       args={"spec": spec.name}):
+        res = analyze_program(program, waivers=waivers)
+    O.metrics.counter("synth_analyze", "synthesize(analyze=True) gate runs",
+                      result="fail" if res.errors else "pass").inc()
+    gate(res)
+    return res.to_doc()
+
+
 def synthesize(spec: NetworkSpec, batch: int | None = None,
                backend: str = "xla", *,
                mesh=None,
@@ -456,7 +476,9 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
                budget: int | None = None,
                retries: int = 2,
                backoff_s: float = 0.05,
-               fallback: bool = True):
+               fallback: bool = True,
+               analyze: bool = False,
+               waivers=None):
     """spec → IR program → {XLA scan, fused Pallas kernel, Verilog RTL}.
 
     All backends consume the same :mod:`repro.codegen` program, so
@@ -497,6 +519,14 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
     actually compiled; ``fallback_from`` records the requested one, and the
     ``synth_retries`` / ``synth_fallback{from_backend,to}`` counters track
     both events.
+
+    ``analyze=True`` runs the :mod:`repro.analyze` static range/overflow +
+    hazard analysis on the IR *before* any backend compile and raises
+    :class:`repro.analyze.AnalysisError` on unwaived error-grade findings
+    (pass a :class:`repro.analyze.WaiverRegistry` as ``waivers`` to
+    acknowledge known ones); the ``repro.analyze/v1`` result document is
+    attached as ``report.analysis``.  The gate is opt-in and outside the
+    memo key — a cache hit re-attaches a fresh analysis.
     """
     from repro import codegen
 
@@ -513,12 +543,18 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
                      mesh)
     if key in _SYNTH_CACHE:
         O.metrics.counter("synth_cache", "synthesize() memo", result="hit").inc()
-        return dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
+        report = dataclasses.replace(_SYNTH_CACHE[key], cache_hit=True)
+        if analyze:    # the gate is outside the memo key: re-run, re-attach
+            report = dataclasses.replace(
+                report, analysis=_static_gate(spec, None, waivers, O))
+        return report
     O.metrics.counter("synth_cache", "synthesize() memo", result="miss").inc()
 
     with O.tracer.span("synth.build_program", cat="synth",
                        args={"spec": spec.name, "backend": backend}):
         program = codegen.build_program(spec)
+    analysis_doc = (_static_gate(spec, program, waivers, O)
+                    if analyze else None)
     # the REQUESTED backend's quant validation still raises on unsupported
     # combinations (user error, not a fault to degrade around)
     quant = _quant_analysis(spec, backend, program)
@@ -609,4 +645,6 @@ def synthesize(spec: NetworkSpec, batch: int | None = None,
         resources=resources,
     )
     _SYNTH_CACHE[key] = report
+    if analysis_doc is not None:
+        return dataclasses.replace(report, analysis=analysis_doc)
     return report

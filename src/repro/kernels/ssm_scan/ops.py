@@ -18,7 +18,7 @@ def _maybe_nonzero(h0) -> bool:
     identical math, so correctness never depends on guessing right)."""
     try:
         return bool((jnp.abs(h0) > 0).any())
-    except Exception:  # TracerBoolConversionError and friends
+    except Exception:  # noqa: BLE001 — TracerBoolConversionError and friends
         return True
 
 

@@ -123,7 +123,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 1,
             k: float(v) for k, v in first_cost_analysis(compiled).items()
             if isinstance(v, (int, float)) and (k in ("flops", "bytes accessed") or k.startswith("bytes accessed"))
         }
-    except Exception as e:  # pragma: no cover
+    except Exception as e:  # noqa: BLE001 # pragma: no cover
         rec["cost_analysis_error"] = str(e)
     try:
         mem = compiled.memory_analysis()
@@ -134,7 +134,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 1,
                       "alias_size_in_bytes")
             if hasattr(mem, k)
         }
-    except Exception as e:  # pragma: no cover
+    except Exception as e:  # noqa: BLE001 # pragma: no cover
         rec["memory_analysis_error"] = str(e)
     try:
         hlo = compiled.as_text()
@@ -153,7 +153,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool, microbatches: int = 1,
             for k in st.collective_bytes
         }
         rec["while_trips"] = st.while_trips
-    except Exception as e:  # pragma: no cover
+    except Exception as e:  # noqa: BLE001 # pragma: no cover
         rec["collectives_error"] = str(e)
     return rec
 
@@ -237,7 +237,7 @@ def main() -> int:
                 log.info(f"[ok]   {arch} {shape} {mesh_name} "
                          f"lower={rec['lower_s']}s compile={rec['compile_s']}s "
                          f"flops={flops_s} -> {p}")
-            except Exception:
+            except Exception:  # noqa: BLE001 — count the cell, keep sweeping
                 failures += 1
                 log.info(f"[FAIL] {arch} {shape} {mesh_name}")
                 traceback.print_exc()

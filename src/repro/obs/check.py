@@ -214,6 +214,124 @@ def check_tune_doc(doc) -> list[str]:
     return errs
 
 
+def _check_findings(findings, where: str) -> tuple[list[str], dict]:
+    """Shared finding-list validation; returns (errors, recount)."""
+    errs: list[str] = []
+    recount = {"errors": 0, "warnings": 0, "waived": 0}
+    if not isinstance(findings, list):
+        return [f"{where}: 'findings' must be a list"], recount
+    for i, f in enumerate(findings):
+        fw = f"{where}: findings[{i}]"
+        if not isinstance(f, dict):
+            errs.append(f"{fw} is not an object")
+            continue
+        for key in ("kind", "severity", "stage", "node", "detail"):
+            if not isinstance(f.get(key), str) or not f[key]:
+                errs.append(f"{fw} needs a string '{key}'")
+        sev = f.get("severity")
+        if sev not in ("error", "warning"):
+            errs.append(f"{fw} unknown severity {sev!r}")
+        if f.get("waived"):
+            if not isinstance(f.get("waived_reason"), str) \
+                    or not f["waived_reason"]:
+                errs.append(f"{fw} waived without a 'waived_reason'")
+            recount["waived"] += 1
+        elif sev == "error":
+            recount["errors"] += 1
+        elif sev == "warning":
+            recount["warnings"] += 1
+        if f.get("id") is not None and isinstance(f.get("kind"), str) \
+                and f.get("id") != f"{f['kind']}:{f.get('stage')}.{f.get('node')}":
+            errs.append(f"{fw} id {f['id']!r} does not match kind:stage.node")
+    return errs, recount
+
+
+def _check_summary(doc, recount, where: str) -> list[str]:
+    s = doc.get("summary")
+    if not isinstance(s, dict):
+        return [f"{where}: missing 'summary' object"]
+    errs = []
+    for key, want in recount.items():
+        if s.get(key) != want:
+            errs.append(f"{where}: summary.{key}={s.get(key)!r} but the "
+                        f"findings list has {want}")
+    if s.get("clean") != (recount["errors"] == 0
+                          and recount["warnings"] == 0):
+        errs.append(f"{where}: 'clean' flag inconsistent with counts")
+    return errs
+
+
+def check_analyze_doc(doc) -> list[str]:
+    """Validate a ``repro.analyze/v1`` static-analysis report: a single-run
+    doc (proven wire bounds + SNR model + findings with a consistent
+    summary) or the CI sweep wrapper (``runs`` + optional ``lint`` block)."""
+    errs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["analyze: top level must be an object"]
+    if doc.get("schema") != "repro.analyze/v1":
+        errs.append(f"analyze: unknown schema {doc.get('schema')!r}")
+    if doc.get("suite") != "analyze":
+        errs.append("analyze: 'suite' must be 'analyze'")
+    if "runs" in doc:  # the analyze-smoke sweep artifact
+        runs = doc["runs"]
+        if not isinstance(runs, list) or not runs:
+            return errs + ["analyze: 'runs' must be a non-empty list"]
+        for i, run in enumerate(runs):
+            errs.extend(f"runs[{i}]: {e}" for e in check_analyze_doc(run))
+        lint = doc.get("lint")
+        if lint is not None:
+            if not isinstance(lint, dict):
+                errs.append("analyze: 'lint' must be an object")
+            else:
+                ferrs, recount = _check_findings(lint.get("findings"),
+                                                 "analyze: lint")
+                errs.extend(ferrs)
+                errs.extend(_check_summary(lint, recount, "analyze: lint"))
+        return errs
+    spec = doc.get("spec")
+    if not isinstance(spec, dict) or not spec.get("name"):
+        errs.append("analyze: missing 'spec' object with a 'name'")
+    if not isinstance(doc.get("width"), int) or doc["width"] < 1:
+        errs.append("analyze: 'width' must be a positive integer")
+    if not isinstance(doc.get("converged"), bool):
+        errs.append("analyze: missing boolean 'converged'")
+    if not isinstance(doc.get("iters"), int) or doc["iters"] < 0:
+        errs.append("analyze: 'iters' must be a non-negative integer")
+    snr = doc.get("static_snr_db")
+    if snr is not None and not isinstance(snr, _NUM):
+        errs.append("analyze: 'static_snr_db' must be numeric or null")
+    msw = doc.get("min_safe_width")
+    if msw is not None and (not isinstance(msw, int) or msw < 1):
+        errs.append("analyze: 'min_safe_width' must be a positive integer "
+                    "or null")
+    wires = doc.get("wires")
+    if not isinstance(wires, dict) or not wires:
+        errs.append("analyze: 'wires' must be a non-empty object")
+        wires = {}
+    for key, w in wires.items():
+        where = f"analyze: wires[{key}]"
+        if not isinstance(w, dict):
+            errs.append(f"{where} is not an object")
+            continue
+        for field in ("lo", "hi"):
+            if not isinstance(w.get(field), int):
+                errs.append(f"{where}.{field} must be an integer word")
+        if isinstance(w.get("lo"), int) and isinstance(w.get("hi"), int) \
+                and w["lo"] > w["hi"]:
+            errs.append(f"{where}: lo > hi")
+        for field in ("amp_real", "eps_real", "snr_db"):
+            if not isinstance(w.get(field), _NUM):
+                errs.append(f"{where}.{field} must be numeric")
+        mwb = w.get("min_word_bits")
+        if mwb is not None and (not isinstance(mwb, int) or mwb < 1):
+            errs.append(f"{where}.min_word_bits must be a positive integer "
+                        "or null")
+    ferrs, recount = _check_findings(doc.get("findings"), "analyze")
+    errs.extend(ferrs)
+    errs.extend(_check_summary(doc, recount, "analyze"))
+    return errs
+
+
 def check_chaos_doc(doc) -> list[str]:
     """Validate a ``repro.chaos/v1`` fault-injection report: every scenario
     carries a verdict + its fault-plan hit counts, the per-class table only
@@ -389,6 +507,10 @@ def check_file(path: str) -> list[str]:
     elif isinstance(doc, dict) \
             and str(doc.get("schema", "")).startswith("repro.loadgen"):
         errs = check_loadgen_doc(doc)
+    elif isinstance(doc, dict) and (
+            str(doc.get("schema", "")).startswith("repro.analyze")
+            or doc.get("suite") == "analyze"):
+        errs = check_analyze_doc(doc)
     else:
         errs = check_metrics_doc(doc)
     return [f"{path}: {e}" for e in errs]

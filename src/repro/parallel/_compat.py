@@ -13,7 +13,7 @@ if shard_map is None:  # older jax
     from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
 
 
-def _pcast_identity(x, axes=None, *, to=None):
+def _pcast_identity(x, axes=None, *, to=None):  # noqa: ARG001 — mirrors jax.lax.pcast's signature
     # Pre-varying-axes jax: every array inside shard_map is implicitly
     # device-varying, so the cast is a no-op.
     return x

@@ -177,7 +177,7 @@ def param_shardings(cfg, params_tree, mesh, *, fsdp: bool = True) -> PyTree:
 # activation / batch / cache specs
 # ---------------------------------------------------------------------------
 
-def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, batch_shapes: PyTree) -> PyTree:
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, batch_shapes: PyTree) -> PyTree:  # noqa: ARG001 — uniform *_specs(cfg, shape-ish, mesh, tree) call shape
     """Input shardings for a shape cell.  Batch shards over all DP axes when
     divisible; long-context batch=1 cells leave batch unsharded and instead
     shard the *cache sequence* (flash-decode style) — see cache_specs.
@@ -186,7 +186,7 @@ def batch_specs(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, batch_shapes: Py
     if cfg.pure_dp and "model" in mesh.axis_names:
         dp = dp + ("model",)
 
-    def one(path, leaf):
+    def one(_path, leaf):
         spec = [None] * len(leaf.shape)
         if len(leaf.shape) >= 1:
             spec[0] = dp

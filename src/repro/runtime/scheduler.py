@@ -364,7 +364,7 @@ class AsyncServer:
                 busy = self.server.tick()
                 self._collect()
                 await asyncio.sleep(0 if busy else self.idle_sleep)
-        except BaseException as exc:
+        except BaseException as exc:  # noqa: BLE001 — propagate ANY driver death to waiters
             # fail every pending generate() — a dead driver must never leave
             # callers awaiting forever on an unobserved exception
             for fut, _req in self._futures.values():

@@ -65,7 +65,7 @@ DEFAULT_BLOCK_K = 8
 _SEQ_LEAVES = ("k", "v", "c_kv", "k_rope")
 
 
-def splice_cache(caches: PyTree, prefill_caches: PyTree, b: int, plen: int,
+def splice_cache(caches: PyTree, prefill_caches: PyTree, b: int, plen: int,  # noqa: ARG001 — plen kept in the admission API; lengths derive from leaf shapes
                  max_seq: int | None = None) -> PyTree:
     """Insert a B=1 prefill cache into batch slot ``b`` of the server cache.
 

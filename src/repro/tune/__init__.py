@@ -37,6 +37,7 @@ from .search import (
     predict_candidate,
     predict_rank,
     resource_score,
+    static_profile,
     tune,
 )
 from .space import Candidate, baseline_candidate, enumerate_space
@@ -58,6 +59,7 @@ __all__ = [
     "predict_rank",
     "resource_score",
     "result_doc",
+    "static_profile",
     "tune",
     "write_doc",
 ]

@@ -34,6 +34,9 @@ def main(argv=None) -> int:
     ap.add_argument("--backends", nargs="*", default=["xla", "pallas"])
     ap.add_argument("--smoke", action="store_true",
                     help="tiny grid + budget 3 (CI-sized, seconds)")
+    ap.add_argument("--analyze-prune", action="store_true",
+                    help="drop candidates whose static range analysis proves "
+                    "an overflow before spending measure budget")
     ap.add_argument("--out", default="",
                     help="write the repro.tune/v1 Pareto report JSON here")
     args = ap.parse_args(argv)
@@ -55,7 +58,8 @@ def main(argv=None) -> int:
         budget = budget or 3
     result = tune(spec, optimize=args.optimize, budget=budget,
                   batch=args.batch, backends=tuple(args.backends),
-                  space_kwargs=space_kwargs)
+                  space_kwargs=space_kwargs,
+                  analyze_prune=args.analyze_prune)
     log.info(result.table())
     if args.out:
         write_doc(result, args.out)

@@ -102,9 +102,43 @@ def resource_score(rr) -> float:
             + rr.state_reg_bits)
 
 
+#: memoized per-spec static-analysis summaries for the predict phase —
+#: candidates differing only in backend/buffering knobs share one IR
+_STATIC_PROFILE_CACHE: dict = {}
+
+
+def static_profile(spec) -> dict:
+    """The :mod:`repro.analyze` summary the predict phase attaches to every
+    candidate: a static quantization-SNR lower bound + minimal safe word
+    length (the Fig. 11 axis as an accuracy score) and the count of
+    error-grade overflow findings (the ``analyze_prune`` pruner's input).
+    Purely static and memoized by spec; ``max_iters`` is kept small because
+    error-grade findings are step-0 facts and the SNR estimate only needs a
+    bounded fixpoint prefix."""
+    cached = _STATIC_PROFILE_CACHE.get(spec)
+    if cached is not None:
+        return cached
+    from repro.analyze import analyze_program
+    from repro.analyze.ranges import RANGE_KINDS
+    from repro.codegen import build_program
+
+    res = analyze_program(build_program(spec), max_iters=64)
+    cached = {
+        "static_snr_db": res.static_snr_db,
+        "min_safe_width": res.min_safe_width,
+        "overflow_errors": sum(
+            1 for f in res.findings
+            if f.severity == "error" and f.kind in RANGE_KINDS),
+    }
+    _STATIC_PROFILE_CACHE[spec] = cached
+    return cached
+
+
 def predict_candidate(cand: Candidate, batch: int) -> dict:
     """Cost-model pass for ONE candidate: IR build + rtlsim cycle estimate +
-    IR resource report.  No XLA lowering, no pallas trace, no execution."""
+    IR resource report + static analyzer profile (SNR lower bound, minimal
+    safe width, overflow-error count).  No XLA lowering, no pallas trace,
+    no execution."""
     from repro.codegen import build_program, report_program, rtlsim
 
     program = build_program(cand.spec)
@@ -112,6 +146,7 @@ def predict_candidate(cand: Candidate, batch: int) -> dict:
     cycles = rtlsim.fsm_cycle_estimate(program)
     res = resource_score(rr)
     tokens = _tokens_per_launch(cand.spec, batch)
+    profile = static_profile(cand.spec)
     # Backend handicap: none.  The cycle model is the paper's FSM — it ranks
     # *schedules*, not XLA-vs-pallas runtimes; both backends of the same
     # schedule share a prediction and the measure pass separates them.
@@ -128,6 +163,9 @@ def predict_candidate(cand: Candidate, batch: int) -> dict:
             "width_bits": int(rr.width_bits),
             "resource_score": float(res),
             "tokens_per_launch": tokens,
+            "static_snr_db": profile["static_snr_db"],
+            "min_safe_width": profile["min_safe_width"],
+            "overflow_errors": profile["overflow_errors"],
             "scores": scores}
 
 
@@ -186,6 +224,7 @@ def tune(spec, optimize: str = "latency", budget: int | None = None,
          batch: int | None = None, *,
          backends: Sequence[str] = ("xla", "pallas"),
          space_kwargs: dict | None = None,
+         analyze_prune: bool = False,
          measure_fn: Callable[[Candidate, int], dict | None] | None = None,
          validate_fn: Callable[..., Any] | None = None) -> TuneResult:
     """Close the Fig. 10 loop for ``spec``: enumerate → predict → measure →
@@ -193,9 +232,13 @@ def tune(spec, optimize: str = "latency", budget: int | None = None,
 
     ``budget`` caps the number of candidates that get compiled/timed
     (default :data:`DEFAULT_BUDGET`); the predict pass always covers the
-    whole space.  ``measure_fn`` / ``validate_fn`` are dependency seams for
-    tests (stub timer, injected parity breaks) and default to the real
-    :func:`measure_candidate` / ``difftest.validate_candidate``.
+    whole space.  ``analyze_prune=True`` drops candidates the static
+    analyzer proves can wrap from reset (error-grade overflow findings)
+    before the measure phase spends compile budget on them — the baseline
+    is always kept so ``speedup`` stays well-defined.  ``measure_fn`` /
+    ``validate_fn`` are dependency seams for tests (stub timer, injected
+    parity breaks) and default to the real :func:`measure_candidate` /
+    ``difftest.validate_candidate``.
     """
     from repro.core.synthesis import _cache_key, synthesize
 
@@ -215,11 +258,24 @@ def tune(spec, optimize: str = "latency", budget: int | None = None,
         scored = predict_rank(cands, optimize, batch)
         O.metrics.counter("tune_candidates", "design points enumerated",
                           phase="predict").inc(len(scored))
+        base = baseline_candidate(spec, backend=backends[0])
+        if analyze_prune:
+            keep = [s for s in scored
+                    if not s.predicted.get("overflow_errors")
+                    or s.cand == base]
+            pruned = len(scored) - len(keep)
+            if pruned:
+                O.metrics.counter("tune_candidates",
+                                  "design points enumerated",
+                                  phase="pruned").inc(pruned)
+                log.info(f"tune[{spec.name}]: analyzer pruned {pruned} "
+                         f"candidate(s) with provable reset-reachable "
+                         f"overflow")
+            scored = keep
         log.info(f"tune[{spec.name}|{optimize}]: {len(scored)} candidates, "
                  f"measuring top {min(budget, len(scored))} (+baseline)")
 
         # measure set: top-k predicted + the default-synthesis baseline
-        base = baseline_candidate(spec, backend=backends[0])
         to_measure = scored[:budget]
         base_scored = next((s for s in to_measure if s.cand == base), None)
         if base_scored is None:
@@ -285,4 +341,4 @@ def tune(spec, optimize: str = "latency", budget: int | None = None,
 
 __all__ = ["DEFAULT_BUDGET", "OBJECTIVES", "Scored", "TuneResult",
            "measure_candidate", "predict_candidate", "predict_rank",
-           "resource_score", "tune"]
+           "resource_score", "static_profile", "tune"]

@@ -20,6 +20,9 @@ CLI::
     python -m repro.verify.difftest --seeds 50           # fuzz seeds 0..49
     python -m repro.verify.difftest --seeds 5 --start 100 -v
     python -m repro.verify.difftest --regen-goldens      # rewrite tests/golden
+    python -m repro.verify.difftest --seeds 50 --trace-ranges
+        # analyzer soundness: rtlsim-observed per-wire min/max must lie
+        # inside the repro.analyze proven interval on every seed
 """
 
 from __future__ import annotations
@@ -223,6 +226,91 @@ def run_case(case: Case) -> CaseResult:
     )
 
 
+@dataclasses.dataclass
+class RangeCaseResult:
+    """``--trace-ranges``: analyzer-vs-rtlsim containment for one case."""
+
+    case: Case
+    ok: bool
+    wires: int              # wires with both a proven bound and observations
+    violations: list[str]   # observed values outside the proven interval
+    flagged_errors: int     # error-grade analyzer findings (should be 0)
+    error: str | None = None
+    elapsed_s: float = 0.0
+
+    def line(self) -> str:
+        status = "ok" if self.ok else "FAIL"
+        msg = f" [{self.error}]" if self.error else ""
+        viol = f" violations={self.violations[:2]}" if self.violations else ""
+        return (f"[{status}] {self.case.describe()} wires={self.wires} "
+                f"flagged={self.flagged_errors}{viol} "
+                f"({self.elapsed_s:.1f}s){msg}")
+
+
+def trace_ranges_case(case: Case) -> RangeCaseResult:
+    """Soundness ground truth: every per-wire min/max rtlsim observes must
+    lie inside the analyzer's proven interval, and no standard-width case
+    may draw an error-grade overflow finding (false positive).  Purely
+    build_program + analyze + rtlsim — no jax compile, no device dispatch.
+    """
+    from repro.analyze import analyze_program
+    from repro.codegen import build_program, rtlsim
+
+    t0 = time.perf_counter()
+    spec, u = case.spec, case_input(case)
+    width = spec.quant_bits or rtlsim.DEFAULT_WIDTH
+    prog = build_program(spec)
+    res = analyze_program(prog, width=width)
+    sim = rtlsim.simulate(prog, u, width=width, collect_ranges=True)
+
+    violations: list[str] = []
+    wires = 0
+    for key, (lo, hi) in sorted(sim.wire_ranges.items()):
+        bd = res.wires.get(key)
+        if bd is None:
+            violations.append(f"{key}: observed but no proven bound")
+            continue
+        wires += 1
+        if not bd.contains_values(lo, hi):
+            violations.append(
+                f"{key}: observed [{int(np.min(lo))}, {int(np.max(hi))}] "
+                f"escapes proven [{min(bd.lo)}, {max(bd.hi)}]")
+    flagged = sum(1 for f in res.findings if f.severity == "error")
+    err_msgs = []
+    if violations:
+        err_msgs.append(f"{len(violations)} containment violation(s)")
+    if flagged:
+        err_msgs.append(f"{flagged} error-grade finding(s) at shipped width")
+    return RangeCaseResult(
+        case=case,
+        ok=not err_msgs,
+        wires=wires,
+        violations=violations,
+        flagged_errors=flagged,
+        error="; ".join(err_msgs) or None,
+        elapsed_s=time.perf_counter() - t0,
+    )
+
+
+def run_trace_ranges(seeds, verbose: bool = False):
+    """``--trace-ranges`` over a seed batch; crash = failure, as ever."""
+    results, failures = [], []
+    for seed in seeds:
+        case = gen_case(seed)
+        try:
+            res = trace_ranges_case(case)
+        except Exception as exc:  # noqa: BLE001 — a crash is a finding too
+            res = RangeCaseResult(case=case, ok=False, wires=0,
+                                  violations=[], flagged_errors=0,
+                                  error=f"{type(exc).__name__}: {exc}")
+        if verbose or not res.ok:
+            log.info(res.line())
+        if not res.ok and seed not in XFAILS:
+            failures.append(res)
+        results.append(res)
+    return results, failures
+
+
 def validate_candidate(spec, batch: int = 2, seed: int = 0) -> CaseResult:
     """Single-candidate parity gate — the tuner's acceptance check.
 
@@ -235,7 +323,7 @@ def validate_candidate(spec, batch: int = 2, seed: int = 0) -> CaseResult:
     case = Case(seed=seed, spec=spec, batch=batch)
     try:
         return run_case(case)
-    except Exception as exc:
+    except Exception as exc:  # noqa: BLE001 — record, never escape
         return CaseResult(case=case, ok=False, float_err=float("nan"),
                           bit_exact=False, max_code_delta=-1,
                           error=f"{type(exc).__name__}: {exc}")
@@ -248,7 +336,7 @@ def run_seeds(seeds, verbose: bool = False):
         case = gen_case(seed)
         try:
             res = run_case(case)
-        except Exception as exc:  # a crash is a finding too
+        except Exception as exc:  # noqa: BLE001 — a crash is a finding too
             res = CaseResult(case=case, ok=False, float_err=float("nan"),
                              bit_exact=False, max_code_delta=-1,
                              error=f"{type(exc).__name__}: {exc}")
@@ -304,6 +392,10 @@ def main(argv=None) -> int:
                     help="print every case, not just failures")
     ap.add_argument("--regen-goldens", action="store_true",
                     help="rewrite tests/golden/*.v from the current emitter")
+    ap.add_argument("--trace-ranges", action="store_true",
+                    help="analyzer soundness mode: check rtlsim-observed "
+                    "per-wire min/max against repro.analyze proven bounds "
+                    "(no jax compile)")
     args = ap.parse_args(argv)
 
     if args.regen_goldens:
@@ -313,6 +405,14 @@ def main(argv=None) -> int:
 
     t0 = time.perf_counter()
     seeds = range(args.start, args.start + args.seeds)
+    if args.trace_ranges:
+        results, failures = run_trace_ranges(seeds, verbose=args.verbose)
+        n_wires = sum(r.wires for r in results)
+        log.info(f"difftest --trace-ranges: "
+                 f"{sum(r.ok for r in results)}/{len(results)} ok, "
+                 f"{len(failures)} failures, {n_wires} wire bounds checked "
+                 f"({time.perf_counter() - t0:.1f}s)")
+        return 1 if failures else 0
     results, failures = run_seeds(seeds, verbose=args.verbose)
     n_xfail = sum(1 for r in results if not r.ok and r.case.seed in XFAILS)
     log.info(f"difftest: {sum(r.ok for r in results)}/{len(results)} ok, "

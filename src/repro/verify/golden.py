@@ -36,6 +36,7 @@ from repro.core.state_space import ACTIVATIONS
 from repro.kernels._lut import RANGE as _AF_RANGE
 
 from repro.codegen.ir import Program
+from repro.codegen.knobs import word_bits_reason
 
 AF_ADDR_BITS = 6  # must match verilog.AF_ADDR_BITS (asserted in tests)
 DEFAULT_WIDTH = 18
@@ -140,8 +141,9 @@ def fixed_forward(program: Program, u: np.ndarray,
     """
     spec = program.spec
     W = width if width is not None else (spec.quant_bits or DEFAULT_WIDTH)
-    if not 8 <= W <= 32:
-        raise ValueError(f"golden model requires 8 <= width <= 32, got {W}")
+    reason = word_bits_reason(W)
+    if reason is not None:
+        raise ValueError(f"golden model: {reason}")
     is_mlp = program.beta is not None
 
     stages = []

@@ -1,0 +1,480 @@
+"""Static analyzer tests: interval-arithmetic soundness oracles against
+rtlsim's bit-accurate primitives, schedule-hazard detection on hand-built
+broken programs, SNR-model monotonicity, the ``repro.analyze/v1`` schema
+round-trip, the waiver registry + synthesis gate, the codebase lints, and
+the under-width true-positive / zero-false-positive regression the
+``--trace-ranges`` difftest mode enforces at scale in CI.
+"""
+
+import dataclasses
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analyze import (
+    AnalysisError,
+    WaiverRegistry,
+    analyze_program,
+    analyze_spec,
+    gate,
+    lint_jit_safety,
+    lint_metrics_drift,
+    lint_src,
+    sweep_doc,
+)
+from repro.analyze.hazards import analyze_hazards
+from repro.analyze.intervals import (
+    Bd,
+    addsub_bd,
+    af_addr_int,
+    af_bd,
+    macc_bd,
+    mul_bd,
+    word_max,
+    word_min,
+)
+from repro.analyze.ranges import analyze_ranges
+from repro.analyze.report import Finding, summarize
+from repro.codegen import build_program, knobs, rtlsim
+from repro.codegen.ir import (
+    DatapathGraph,
+    GraphBuilder,
+    Program,
+    Schedule,
+    Stage,
+)
+from repro.core.quantization import default_format
+from repro.core.synthesis import NetworkSpec
+from repro.obs.check import check_analyze_doc
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+LSTM = NetworkSpec(2, 1, 4, 2, cell="lstm", seq_len=4)
+GRU = NetworkSpec(2, 1, 4, 2, cell="gru", seq_len=4)
+MLP = NetworkSpec(3, 2, 4, 2)
+
+
+def _rand_bd(rng, lanes, width, spread=None):
+    """A random interval plus points sampled inside it."""
+    spread = spread or (1 << (width - 2))
+    a = rng.integers(-spread, spread, size=lanes)
+    b = rng.integers(-spread, spread, size=lanes)
+    lo, hi = np.minimum(a, b), np.maximum(a, b)
+    pts = rng.integers(lo, hi + 1, size=(16, lanes))
+    return Bd(tuple(int(v) for v in lo), tuple(int(v) for v in hi)), pts
+
+
+# ---------------------------------------------------------------------------
+# interval arithmetic: random containment oracles vs rtlsim
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("width", [8, 16, 18])
+def test_af_addr_int_matches_rtlsim(width):
+    rng = np.random.default_rng(width)
+    xs = rng.integers(word_min(width), word_max(width) + 1, size=512)
+    want = rtlsim.af_addr(xs, width)
+    got = np.array([af_addr_int(int(v), width) for v in xs])
+    assert np.array_equal(got, want)
+    # monotone nondecreasing — the property the ROM-slice bound relies on
+    xs_sorted = np.sort(xs)
+    addrs = rtlsim.af_addr(xs_sorted, width)
+    assert np.all(np.diff(addrs) >= 0)
+
+
+@pytest.mark.parametrize("width,unroll", [(8, 1), (16, 2), (18, 3)])
+def test_macc_bd_contains_rtlsim(width, unroll):
+    rng = np.random.default_rng(width * 7 + unroll)
+    n_in, n_out = 5, 3
+    w_rom = rng.integers(word_min(width) // 4, word_max(width) // 4,
+                         size=(n_in, n_out))
+    bias = rng.integers(-100, 100, size=n_out)
+    x_bd, pts = _rand_bd(rng, n_in, width)
+    out = macc_bd(x_bd, w_rom.tolist(), width,
+                  bias=Bd.point(bias.tolist()))
+    for x in pts:
+        z = rtlsim.macc_layer(x, w_rom, width, bias=bias, unroll=unroll)
+        assert out.contains_values(z, z)
+
+
+@pytest.mark.parametrize("op", ["add", "sub", "mul"])
+def test_gate_algebra_bd_contains_rtlsim(op):
+    width = 16
+    rng = np.random.default_rng(hash(op) % 2 ** 31)
+    a_bd, a_pts = _rand_bd(rng, 4, width)
+    b_bd, b_pts = _rand_bd(rng, 4, width)
+    if op == "mul":
+        out = mul_bd(a_bd, b_bd, width)
+    else:
+        out = addsub_bd(op, a_bd, b_bd, width)
+    for a, b in zip(a_pts, b_pts):
+        z = rtlsim._elementwise(op, np.asarray(a), np.asarray(b), width)
+        assert out.contains_values(z, z)
+
+
+@pytest.mark.parametrize("fn", ["tanh", "sigmoid", "relu", "identity"])
+def test_af_bd_contains_rtlsim(fn):
+    width = 16
+    fmt = default_format(width)
+    rom = (None if fn in rtlsim._COMB_AF
+           else rtlsim.af_rom(fn, fmt).tolist())
+    rng = np.random.default_rng(3)
+    x_bd, pts = _rand_bd(rng, 4, width, spread=1 << (width - 1))
+    out = af_bd(x_bd, fn, rom, width)
+    for x in pts:
+        if fn == "identity":
+            z = np.asarray(x)
+        elif fn == "relu":
+            z = np.maximum(np.asarray(x), 0)
+        else:
+            z = rtlsim.af_lookup(np.asarray(x), np.asarray(rom), width)
+        assert out.contains_values(z, z)
+    if fn == "sigmoid":
+        # the address-restricted slice keeps gates in [0, scale], the fact
+        # the LSTM/GRU fixpoint needs to converge
+        assert min(out.lo) >= 0
+        assert max(out.hi) <= (1 << (width - 4))
+
+
+# ---------------------------------------------------------------------------
+# whole-program ranges: convergence, invariances, containment
+# ---------------------------------------------------------------------------
+
+def test_gru_lerp_converges_without_widening():
+    res = analyze_ranges(build_program(GRU), width=16)
+    assert res.converged
+    assert not any(f.kind == "nonconverged" for f in res.findings)
+    # the write-back state stays well inside the word range — naive
+    # interval arithmetic would have widened h to full range
+    h = res.wires["layer0.h"]
+    assert max(h.hi) < word_max(16)
+
+
+def test_bounds_invariant_under_c_slow_and_unroll():
+    base = analyze_ranges(build_program(LSTM), width=16)
+    folded = analyze_ranges(build_program(
+        dataclasses.replace(LSTM, c_slow=2, unroll=2)), width=16)
+    assert set(base.wires) == set(folded.wires)
+    for key in base.wires:
+        assert base.wires[key] == folded.wires[key]
+
+
+@pytest.mark.parametrize("spec", [MLP, LSTM, GRU,
+                                  NetworkSpec(2, 1, 4, 2, cell="ssm",
+                                              seq_len=4)])
+def test_observed_ranges_inside_proven_bounds(spec):
+    prog = build_program(spec)
+    res = analyze_program(prog, width=16)
+    rng = np.random.default_rng(0)
+    shape = (4, spec.num_inputs) if spec.cell == "mlp" \
+        else (4, spec.seq_len, spec.num_inputs)
+    u = rng.uniform(-1.0, 1.0, size=shape).astype(np.float32)
+    sim = rtlsim.simulate(prog, u, width=16, collect_ranges=True)
+    assert sim.wire_ranges
+    for key, (lo, hi) in sim.wire_ranges.items():
+        bd = res.wires[key]
+        assert bd.contains_values(lo, hi), key
+
+
+def test_no_error_findings_at_shipped_widths():
+    # the zero-false-positive half of the --trace-ranges contract, in
+    # miniature (CI runs the full 50-seed sweep)
+    from repro.verify.difftest import run_trace_ranges
+
+    results, failures = run_trace_ranges(range(8))
+    assert not failures
+    assert all(r.flagged_errors == 0 for r in results)
+
+
+# ---------------------------------------------------------------------------
+# under-width true positive: flagged AND actually wraps
+# ---------------------------------------------------------------------------
+
+def _underwidth_lstm():
+    """quant_bits=8 LSTM with saturating-large weights: every input word is
+    multiplied by the max ROM word, so the step-0 MACC provably leaves the
+    8-bit word range."""
+    spec = NetworkSpec(2, 1, 4, 2, cell="lstm", seq_len=3, quant_bits=8)
+    prog = build_program(spec)
+    st = prog.stages[0]
+    st.params["W"] = jnp.full_like(st.params["W"], 6.0)  # quantizes to +127
+    st.params["b"] = jnp.zeros_like(st.params["b"])
+    return spec, prog
+
+
+def test_underwidth_true_positive():
+    spec, prog = _underwidth_lstm()
+    res = analyze_program(prog, width=8)
+    errs = [f for f in res.findings if f.severity == "error"]
+    assert errs, "under-width program must draw an error-grade finding"
+    assert all(f.step == 0 for f in errs)
+
+    # ground truth: with a sign-aligned input the RTL really wraps — all
+    # weights and inputs are positive, yet the observed MACC word goes
+    # negative (the exact sum is provably positive and > word_max)
+    u = np.ones((1, spec.seq_len, spec.num_inputs), np.float32)
+    sim = rtlsim.simulate(prog, u, width=8, collect_ranges=True)
+    z_lo, _z_hi = sim.wire_ranges["layer0.z"]
+    assert int(np.min(z_lo)) < 0
+    # exact unwrapped word: 2 input lanes of 1.0 (word 16) times weight
+    # word 127, Q-aligned: (2*16*127) >> 4 = 254 > word_max(8) = 127
+    assert (2 * 16 * 127) >> 4 > word_max(8)
+    # soundness held anyway: flagged lanes were widened, so containment
+    for key, (lo, hi) in sim.wire_ranges.items():
+        assert res.wires[key].contains_values(lo, hi), key
+
+
+def test_min_safe_width_monotone_in_target():
+    prog = build_program(NetworkSpec(2, 1, 4, 2, cell="ssm", seq_len=4))
+    widths = []
+    for target in (5.0, 20.0, 40.0):
+        res = analyze_program(prog, width=16, snr_target_db=target)
+        widths.append(res.min_safe_width or 99)
+    assert widths == sorted(widths)
+
+
+# ---------------------------------------------------------------------------
+# hazards on hand-built broken programs
+# ---------------------------------------------------------------------------
+
+def _program_of(stages):
+    return Program(spec=None, stages=stages, C=jnp.zeros((1, 2)),
+                   readout_state=stages[-1].graph.states and
+                   next(iter(stages[-1].graph.states)))
+
+
+def _stage(name, graph, steps=2, unroll=1, c_slow=1):
+    return Stage(name, graph, Schedule(steps=steps, unroll=unroll,
+                                       c_slow=c_slow), {})
+
+
+def test_hazard_state_unwritten_and_dead_node():
+    # bypass validate() on purpose: hazards diagnose structurally "legal
+    # enough" graphs the strict constructor would reject
+    b = GraphBuilder()
+    b.input("u", 2)
+    b.state("x", 2)                    # read, never written
+    b.add("y", "u", "x")
+    b.add("orphan", "u", "u")          # reachable from nothing
+    g = DatapathGraph(list(b._nodes), dict(b._states), {}, "y")
+    kinds = {f.kind for f in analyze_hazards(_program_of([_stage("s", g)]))}
+    assert "state-unwritten" in kinds
+    assert "dead-node" in kinds
+    sev = {f.kind: f.severity
+           for f in analyze_hazards(_program_of([_stage("s", g)]))}
+    assert sev["state-unwritten"] == "error"
+    assert sev["dead-node"] == "warning"
+
+
+def test_hazard_writeback_alias_and_unread():
+    b = GraphBuilder()
+    b.input("u", 2)
+    b.state("x", 2)
+    b.state("w", 2)                    # written, never read
+    b.add("y", "u", "x")
+    b.update("x", "y")
+    b.update("w", "y")                 # same source as x: WAW shape
+    g = b.build()
+    prog = _program_of([_stage("s", g)])
+    prog = dataclasses.replace(prog, readout_state="x")
+    kinds = {f.kind for f in analyze_hazards(prog)}
+    assert "writeback-alias" in kinds
+    assert "state-unread" in kinds
+
+
+def test_hazard_schedule_mismatch_and_unreachable():
+    def tiny(name):
+        b = GraphBuilder()
+        b.input("u", 2)
+        b.state("x", 2)
+        b.add("y", "u", "x")
+        b.update("x", "y")
+        return b.build(output="y")
+
+    stages = [_stage("a", tiny("a"), steps=2),
+              _stage("b", tiny("b"), steps=0, c_slow=3)]
+    kinds = {f.kind for f in analyze_hazards(_program_of(stages))}
+    assert "unreachable-stage" in kinds
+    assert "schedule-mismatch" in kinds
+
+
+def test_hazard_cascade_break():
+    b1 = GraphBuilder()
+    b1.input("u", 2)
+    b1.state("x", 2)
+    b1.add("y", "u", "x")
+    b1.update("x", "y")
+    g1 = b1.build()                    # no Mealy output
+    b2 = GraphBuilder()
+    b2.input("u", 2)
+    b2.state("h", 2)
+    b2.add("y", "u", "h")
+    b2.update("h", "y")
+    g2 = b2.build(output="y")
+    kinds = {f.kind for f in analyze_hazards(
+        _program_of([_stage("a", g1), _stage("b", g2)]))}
+    assert "cascade-break" in kinds
+
+
+def test_real_cells_have_no_error_hazards():
+    for spec in (MLP, LSTM, GRU):
+        findings = analyze_hazards(build_program(spec))
+        assert not [f for f in findings if f.severity == "error"]
+
+
+# ---------------------------------------------------------------------------
+# schema round-trip + repro.obs.check
+# ---------------------------------------------------------------------------
+
+def test_finding_round_trip():
+    f = Finding(kind="acc-wrap", severity="error", stage="layer0", node="z",
+                detail="d", step=0, lanes=3)
+    assert Finding.from_dict(f.to_dict()) == f
+    assert f.id == "acc-wrap:layer0.z"
+
+
+def test_analyze_doc_validates(tmp_path):
+    res = analyze_spec(LSTM, width=16)
+    doc = res.to_doc()
+    assert check_analyze_doc(doc) == []
+    # sweep wrapper + lint block, through the JSON round trip
+    sweep = sweep_doc([doc], lint_findings=[])
+    path = tmp_path / "analyze.json"
+    path.write_text(json.dumps(sweep))
+    assert check_analyze_doc(json.loads(path.read_text())) == []
+
+
+def test_analyze_doc_check_catches_corruption():
+    doc = analyze_spec(LSTM, width=16).to_doc()
+    doc["summary"]["errors"] = 7            # inconsistent with findings
+    assert check_analyze_doc(doc)
+    doc2 = analyze_spec(LSTM, width=16).to_doc()
+    doc2["findings"].append({"kind": "acc-wrap", "severity": "fatal",
+                             "stage": "s", "node": "n", "detail": "d"})
+    assert any("severity" in e for e in check_analyze_doc(doc2))
+
+
+# ---------------------------------------------------------------------------
+# waivers + the synthesize gate
+# ---------------------------------------------------------------------------
+
+def test_waiver_registry_and_gate():
+    _spec, prog = _underwidth_lstm()
+    res = analyze_program(prog, width=8)
+    assert not res.ok
+    with pytest.raises(AnalysisError) as exc:
+        gate(res)
+    assert exc.value.findings
+    waivers = WaiverRegistry.parse(
+        [f"{f.id}=known saturating-weight fixture" for f in res.errors])
+    res2 = analyze_program(prog, width=8, waivers=waivers)
+    assert res2.ok
+    gate(res2)                              # waived: no raise
+    assert summarize(res2.findings)["waived"] >= 1
+
+
+def test_waiver_requires_reason():
+    with pytest.raises(ValueError):
+        WaiverRegistry().waive("kind:s.n", "  ")
+    with pytest.raises(ValueError):
+        WaiverRegistry.parse(["no-equals-sign"])
+
+
+def test_synthesize_analyze_attaches_report():
+    from repro.core.synthesis import synthesize, synthesize_cache_clear
+
+    synthesize_cache_clear()
+    spec = NetworkSpec(2, 1, 3, 1)
+    r = synthesize(spec, backend="xla", measure=False, analyze=True)
+    assert r.analysis is not None
+    assert r.analysis["schema"] == "repro.analyze/v1"
+    assert check_analyze_doc(r.analysis) == []
+    # cache hit re-attaches; plain cached call carries no stale analysis
+    r2 = synthesize(spec, backend="xla", measure=False, analyze=True)
+    assert r2.cache_hit and r2.analysis is not None
+    r3 = synthesize(spec, backend="xla", measure=False)
+    assert r3.cache_hit and r3.analysis is None
+
+
+# ---------------------------------------------------------------------------
+# ir.Stage.validate AF-domain tightening + the shared width table
+# ---------------------------------------------------------------------------
+
+def test_stage_validate_rejects_out_of_domain_af():
+    b = GraphBuilder()
+    b.input("u", 4)
+    b.state("x", 4)
+    b.const("big", (1, 4))
+    b.add("z", "x", "big")
+    b.af("y", "z", "tanh")
+    b.update("x", "y")
+    st = Stage("s", b.build(), Schedule(steps=1),
+               {"big": jnp.full((1, 4), 100.0)})
+    with pytest.raises(ValueError, match="ROM domain"):
+        st.validate()
+    st_ok = Stage("s", st.graph, st.schedule,
+                  {"big": jnp.full((1, 4), 0.5)})
+    st_ok.validate()
+
+
+def test_word_width_table_is_shared():
+    assert knobs.word_bits_reason(knobs.WORD_BITS_MIN) is None
+    assert knobs.word_bits_reason(knobs.WORD_BITS_MAX) is None
+    assert knobs.word_bits_reason(knobs.WORD_BITS_MIN - 1) is not None
+    assert knobs.word_bits_reason(knobs.WORD_BITS_MAX + 1) is not None
+    prog = build_program(NetworkSpec(2, 1, 3, 1))
+    with pytest.raises(ValueError, match="rtlsim"):
+        rtlsim.simulate(prog, np.zeros((1, 2), np.float32), width=7)
+
+
+# ---------------------------------------------------------------------------
+# lint suite
+# ---------------------------------------------------------------------------
+
+JIT_UNSAFE_SRC = '''
+import time
+from repro import obs as obs_lib
+
+def build(program):
+    OBS = obs_lib.OBS
+    OBS.metrics.counter("compiles", "ok").inc()   # depth 1: sanctioned
+
+    def kernel(x_ref, o_ref):
+        OBS.metrics.counter("steps", "bad").inc() # traced: flagged
+        t = time.perf_counter()                   # traced: flagged
+        o_ref[...] = x_ref[...] * t
+
+    def run(u):
+        u.block_until_ready()                     # traced: flagged
+        print("step")                             # traced: flagged
+        return u
+
+    return kernel, run
+'''
+
+
+def test_lint_jit_safety_fixture():
+    findings = lint_jit_safety({"fixture.py": JIT_UNSAFE_SRC})
+    nodes = {f.node for f in findings}
+    assert len(findings) == 4
+    assert all(f.severity == "error" for f in findings)
+    assert any(n.startswith("kernel.") for n in nodes)
+    assert any("block_until_ready" in n for n in nodes)
+    assert any("print" in n for n in nodes)
+
+
+def test_lint_metrics_drift_fixture():
+    # assembled from pieces so lint_src over THIS file doesn't match them
+    sub = '["counters"]'
+    reg = {"m.py": 'M.counter' + '("hits", "d", kind="full")'}
+    refs = {"t.py": f'snap{sub}["hits{{kind=full}}"]\n'
+                    f'snap{sub}["renamed_metric"]'}
+    findings = lint_metrics_drift(reg, refs)
+    assert [f.node for f in findings] == ["renamed_metric"]
+
+
+def test_lint_src_clean_on_repo():
+    findings = lint_src(str(REPO_ROOT))
+    assert [f.detail for f in findings if f.severity == "error"] == []
